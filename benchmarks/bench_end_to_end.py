@@ -1,0 +1,72 @@
+"""Paper Fig. 9 / Table IV bottom: end-to-end BERT-family models.
+
+MCFuser only fuses the MBCI subgraphs (self-attention here); the rest
+of the network runs under the base compiler.  We therefore report the
+end-to-end analytical time with attention unfused vs MCFuser-fused
+(Amdahl over the full per-layer op list), plus the end-to-end tuning
+time (one search per unique attention shape — shape caching mirrors the
+paper's MCFuser+Relay setup).
+"""
+import time
+
+import numpy as np
+
+from repro.core import api
+from repro.core.chain import attention_chain, gemm_chain
+from repro.core.perf_model import V5E, estimate
+
+from .workloads import BERT
+
+
+def layer_times(d_model, heads, d_ff, seq, batch=8):
+    """Analytical per-layer op times (bf16, V5E): QKV/O projections +
+    FFN (compute-bound GEMMs) + the attention MBCI chain."""
+    hw = V5E
+    dh = d_model // heads
+
+    def gemm_time(m, k, n):
+        fl = 2 * m * k * n
+        by = 2 * (m * k + k * n + m * n)
+        return max(fl / hw.peak_flops, by / hw.hbm_bw)
+
+    proj = 4 * gemm_time(batch * seq, d_model, d_model)
+    ffn = 2 * gemm_time(batch * seq, d_model, d_ff)
+    from .bench_attention import unfused_time
+    unfused_attn = unfused_time(heads * batch, seq, seq, dh, dh)
+    return proj + ffn, unfused_attn
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, (layers, d_model, heads, d_ff, seq) in BERT.items():
+        other, unfused_attn = layer_times(d_model, heads, d_ff, seq)
+        dh = d_model // heads
+        t0 = time.perf_counter()
+        tk = api.fuse_attention(seq, seq, dh, dh, heads=heads * 8,
+                                dtype="bfloat16")
+        tune_s = time.perf_counter() - t0
+        fused_attn = estimate(tk.report.best, V5E)
+        t_unfused = layers * (other + unfused_attn)
+        t_fused = layers * (other + fused_attn)
+        rows.append({
+            "name": name,
+            "ms_unfused": t_unfused * 1e3,
+            "ms_fused": t_fused * 1e3,
+            "speedup": t_unfused / t_fused,
+            "attn_share_unfused": layers * unfused_attn / t_unfused,
+            "tuning_s": tune_s,
+        })
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"e2e_{r['name']},{r['ms_fused']*1e3:.1f},"
+              f"speedup={r['speedup']:.2f}x "
+              f"attn_share={r['attn_share_unfused']*100:.0f}% "
+              f"tune={r['tuning_s']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

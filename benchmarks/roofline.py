@@ -1,0 +1,62 @@
+"""Assemble the §Roofline table from results/dryrun/*.json."""
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        rows.append(r)
+    return rows
+
+
+def table(out_dir: str = "results/dryrun", mesh: str = "16x16") -> str:
+    rows = load(out_dir)
+    lines = [
+        "| arch | shape | regime | HBM GB | compute s | memory s "
+        "| (mem s, XLA-attn) | collective s | dominant | MF/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|"
+            "---|", "|---|---|---|---|", 1),
+    ]
+    lines[1] = "|" + "---|" * 10
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" — | — | skipped | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" — | — | ERROR | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('regime','')} "
+            f"| {r['memory']['peak_per_device_gb']:.1f} "
+            f"| {ro['compute_s']:.3e} | {ro['memory_s']:.3e} "
+            f"| {ro['memory_s_xla']:.3e} | {ro['collective_s']:.3e} "
+            f"| **{ro['dominant']}** | {ro['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def summary(out_dir: str = "results/dryrun") -> dict:
+    rows = [r for r in load(out_dir) if "roofline" in r]
+    doms = {}
+    for r in rows:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    return {"cells": len(rows), "dominant_hist": doms}
+
+
+def main():
+    print("name,us_per_call,derived")
+    s = summary()
+    print(f"roofline_cells,0,compiled={s['cells']} "
+          f"dominant={s['dominant_hist']}")
+
+
+if __name__ == "__main__":
+    print(table())

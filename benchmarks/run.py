@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import contextlib
+import io
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_ablation, bench_attention, bench_end_to_end,
+                   bench_gemm_chain, bench_model_accuracy,
+                   bench_tuning_time, roofline)
+
+    print("name,us_per_call,derived")
+    for mod, label in [
+        (bench_gemm_chain, "Table II / Fig 8ab"),
+        (bench_attention, "Table III / Fig 8cd"),
+        (bench_end_to_end, "Fig 9"),
+        (bench_tuning_time, "Table IV"),
+        (bench_model_accuracy, "Figs 10-11"),
+        (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
+        (roofline, "Roofline summary (dry-run artifacts)"),
+    ]:
+        print(f"# --- {mod.__name__} ({label}) ---", file=sys.stderr)
+        try:
+            buf = io.StringIO()
+            with contextlib.redirect_stdout(buf):
+                mod.main()
+            for line in buf.getvalue().splitlines():
+                if line.strip() == "name,us_per_call,derived":
+                    continue  # each bench prints its own header; drop dups
+                print(line)
+        except Exception:
+            traceback.print_exc()
+            print(f"{mod.__name__},0,ERROR")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,37 @@
+"""The paper's exact workload tables (Table II + Table III)."""
+
+# Table II: batch GEMM chains (batch, M, N, K, H)
+GEMM_CHAINS = {
+    "G1": (1, 512, 256, 64, 64),
+    "G2": (1, 512, 256, 64, 128),
+    "G3": (1, 512, 256, 64, 256),
+    "G4": (1, 512, 512, 256, 256),
+    "G5": (1, 512, 512, 512, 256),
+    "G6": (1, 512, 512, 1024, 256),
+    "G7": (1, 512, 512, 128, 128),
+    "G8": (1, 1024, 512, 128, 128),
+    "G9": (1, 2048, 512, 128, 128),
+    "G10": (1, 1024, 1024, 128, 128),
+    "G11": (4, 1024, 1024, 128, 128),
+    "G12": (8, 1024, 1024, 128, 128),
+}
+
+# Table III: self-attention modules (#heads, M, N, K, H, network)
+ATTENTION = {
+    "S1": (8, 512, 512, 64, 64, "Bert-Small"),
+    "S2": (12, 512, 512, 64, 64, "Bert-Base"),
+    "S3": (16, 512, 512, 64, 64, "Bert-Large"),
+    "S4": (12, 256, 256, 64, 64, "ViT-Base"),
+    "S5": (16, 256, 256, 64, 64, "ViT-Large"),
+    "S6": (16, 256, 256, 80, 80, "ViT-Huge"),
+    "S7": (1, 512, 256, 64, 64, "MLP-Mixer"),
+    "S8": (1, 768, 384, 64, 64, "MLP-Mixer"),
+    "S9": (1, 1024, 512, 64, 64, "MLP-Mixer"),
+}
+
+# Fig 9: end-to-end BERT models (L, d_model, heads, d_ff, seq)
+BERT = {
+    "Bert-Small": (4, 512, 8, 2048, 512),
+    "Bert-Base": (12, 768, 12, 3072, 512),
+    "Bert-Large": (24, 1024, 16, 4096, 512),
+}

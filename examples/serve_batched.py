@@ -1,0 +1,55 @@
+"""Batched serving example: prefill + greedy decode over a KV cache for
+any assigned architecture (smoke-sized on CPU; identical code drives
+the TPU mesh).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, ARCHS, get_config
+from repro.launch.serve import generate
+from repro.launch.steps import build_model
+from repro.models.lm import Runtime
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b",
+                    choices=sorted(ALIASES) + ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg, Runtime(remat=False))
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.n_prefix_embeds:
+        kwargs["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.n_prefix_embeds, cfg.d_model))
+
+    t0 = time.perf_counter()
+    tokens = generate(model, params, prompts, args.gen, **kwargs)
+    dt = time.perf_counter() - t0
+    assert tokens.shape == (args.batch, args.gen)
+    assert np.all(tokens >= 0) and np.all(tokens < cfg.vocab)
+    print(f"{cfg.name}: generated {tokens.shape[1]} tokens x "
+          f"{tokens.shape[0]} requests in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s)")
+    print("request 0:", tokens[0][:12].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Sharded, atomic, resumable checkpointing (no orbax in this env).
+
+Layout:  <dir>/step_<N>/
+            manifest.json           tree structure + dtypes + shapes
+            arr_<i>.npy             one file per leaf (host-gathered)
+            DONE                    commit marker (atomic rename)
+
+Writes go to a tmp dir first and are renamed into place, so a crash
+mid-save never corrupts the latest checkpoint; `latest_step` only
+considers committed (DONE-marked) steps.  An async mode runs the save
+on a background thread off the critical path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree, blocking: bool = True
+         ) -> Optional[threading.Thread]:
+    """Save a pytree of arrays; returns the writer thread if async."""
+    leaves = [(k, np.asarray(v)) for k, v in _flatten_with_paths(tree)]
+    treedef = jax.tree.structure(tree)
+
+    def write():
+        final = os.path.join(directory, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, (key, arr) in enumerate(leaves):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": f"arr_{i}.npy",
+                 "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return None
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "DONE")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like) -> Any:
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs).
+    Device placement/sharding is the caller's job (jax.device_put with
+    the current mesh — this is what elastic re-sharding uses)."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    flat = _flatten_with_paths(like)
+    leaves = []
+    for key, ref in flat:
+        entry = by_key[key]
+        arr = np.load(os.path.join(path, entry["file"]))
+        assert list(arr.shape) == list(ref.shape), (key, arr.shape, ref.shape)
+        leaves.append(arr)
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def prune_old(directory: str, keep: int = 2) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(s for s in (
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,15 @@
+"""granite-34b [arXiv:2405.04324]: llama-arch code model, MQA, depth 88.
+88L d_model=6144 48H (kv=1) d_ff=24576 vocab=49152."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+    d_ff=24576, vocab=49152,
+)
+
+SMOKE = ModelConfig(
+    name="granite-34b-smoke", family="dense",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=128, vocab=512, dtype="float32",
+)

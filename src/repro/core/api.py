@@ -1,0 +1,95 @@
+"""MCFuser public API: tune once, get a fused callable.
+
+    from repro.core import api
+    fn, report = api.fuse_gemm_chain(M=512, N=512, K=256, H=256, batch=1)
+    e = fn(a, b, d)
+
+Tuned schedules are cached per (chain signature, hardware) so model
+code can call this at trace time for every layer at zero cost after
+the first hit — the paper's "tuning time" is paid once per shape.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+
+from . import codegen
+from .chain import Chain, attention_chain, gemm_chain
+from .perf_model import TpuSpec, V5E, estimate, roofline_bound
+from .search import SearchReport, heuristic_search
+
+_CACHE: dict[tuple, "TunedKernel"] = {}
+
+
+@dataclass
+class TunedKernel:
+    fn: Callable
+    report: SearchReport
+    params: object
+    tuning_seconds: float
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fuse_gemm_chain(M: int, N: int, K: int, H: int, batch: int = 1,
+                    dtype: str = "float32", hw: TpuSpec = V5E,
+                    interpret: Optional[bool] = None,
+                    unit: int = 128, seed: int = 0) -> TunedKernel:
+    """Tune and build the fused 2-GEMM-chain kernel E = (A@B)@D."""
+    key = ("gemm", M, N, K, H, batch, dtype, hw.name, unit)
+    if key in _CACHE:
+        return _CACHE[key]
+    chain = gemm_chain(M, N, K, H, batch=batch, dtype=dtype)
+    t0 = time.perf_counter()
+    report = heuristic_search(chain, hw=hw, unit=unit, seed=seed)
+    dt = time.perf_counter() - t0
+    params = codegen.to_gemm_chain_params(report.best)
+    interp = (not _is_tpu()) if interpret is None else interpret
+
+    from ..kernels.gemm_chain import fused_gemm_chain as kernel
+
+    fn = functools.partial(kernel, interpret=interp, **params.as_kwargs())
+    tk = TunedKernel(fn, report, params, dt)
+    _CACHE[key] = tk
+    return tk
+
+
+def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
+                   batch: int = 1, dtype: str = "float32",
+                   causal: bool = False, window: int = 0,
+                   scale: Optional[float] = None,
+                   hw: TpuSpec = V5E, interpret: Optional[bool] = None,
+                   unit: int = 128, seed: int = 0) -> TunedKernel:
+    """Tune and build the fused attention kernel for (M, N, K, H)."""
+    key = ("attn", M, N, K, H, heads, batch, dtype, causal, window,
+           hw.name, unit)
+    if key in _CACHE:
+        return _CACHE[key]
+    chain = attention_chain(M, N, K, H, heads=heads, batch=batch,
+                            dtype=dtype, causal=causal, window=window)
+    t0 = time.perf_counter()
+    report = heuristic_search(chain, hw=hw, unit=unit, seed=seed)
+    dt = time.perf_counter() - t0
+    params = codegen.to_attention_params(report.best)
+    interp = (not _is_tpu()) if interpret is None else interpret
+
+    from ..kernels.attention import fused_attention as kernel
+
+    fn = functools.partial(kernel, interpret=interp, causal=causal,
+                           window=window, scale=scale, **params.as_kwargs())
+    tk = TunedKernel(fn, report, params, dt)
+    _CACHE[key] = tk
+    return tk
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

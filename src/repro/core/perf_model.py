@@ -1,0 +1,122 @@
+"""Analytical performance model (§IV-A, eqs (2)–(5)) on TPU constants.
+
+    t_estm = (t_mem + t_comp) * alpha                      (2)
+    t_mem  = Σ_loads/stores  bytes_per_visit * trips / W   (3)
+    t_comp = Σ_computes      flops_per_visit * trips / P   (4)
+    alpha  = (N_grid + N_stages) / N_grid                  (5')
+
+Eq (5') is the TPU re-interpretation of the paper's SM-occupancy
+slowdown: a Pallas kernel's grid is executed by one TensorCore as a
+software pipeline (HBM→VMEM DMA overlapped with MXU); with few grid
+steps the pipeline fill/drain is not amortized.  Same monotone shape as
+the paper's (N_block + N_SM)/N_block, different mechanism (DESIGN.md §2).
+
+VMEM estimation mirrors the paper's eq. (1) shared-memory estimate with
+a 2x double-buffer factor on pipelined input tiles (Mosaic allocates
+two copies of every streamed block).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .chain import DTYPE_BYTES
+from .dag import Schedule
+
+
+@dataclass(frozen=True)
+class TpuSpec:
+    """TPU v5e (the production target in this repo)."""
+
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12        # bf16 MXU peak (P)
+    hbm_bw: float = 819e9             # bytes/s (W)
+    vmem_bytes: int = 128 * 1024 * 1024
+    ici_bw: float = 50e9              # bytes/s per link
+    mxu_align: int = 128              # lane width; matmul tile unit
+    sublane: int = 8
+    pipeline_stages: int = 2          # double buffering (alpha, eq 5')
+    vmem_slack: float = 1.2           # paper's Rule-4 estimation slack
+    n_cores: int = 1                  # v5e: 1 TensorCore per chip
+
+
+V5E = TpuSpec()
+
+# fp32 path (interpret-mode / CPU correlation experiments use fp32)
+V5E_F32 = TpuSpec(name="tpu_v5e_f32", peak_flops=197e12 / 4)
+
+
+def t_mem(sched: Schedule, hw: TpuSpec = V5E) -> float:
+    total = 0.0
+    for s in sched.stmts:
+        if s.kind == "compute":
+            continue
+        tensor = sched.chain.tensors[s.tensor]
+        bytes_per_visit = (sched.visit_elems(s, tensor.dims)
+                          * tensor.dtype_bytes)
+        total += bytes_per_visit * sched.trips(s)
+    return total / hw.hbm_bw
+
+
+def t_comp(sched: Schedule, hw: TpuSpec = V5E) -> float:
+    total = 0.0
+    ops = {o.name: o for o in sched.chain.ops}
+    for s in sched.stmts:
+        if s.kind != "compute":
+            continue
+        op = ops[s.op]
+        flops_per_visit = (op.flops_per_point
+                           * sched.visit_elems(s, s.related))
+        # MXU alignment waste: sub-128 matmul dims still occupy full lanes
+        util = 1.0
+        for d in s.related:
+            sz = (sched.tile_sizes[d] if d in s.path
+                  else sched.chain.loops[d])
+            if sz < hw.mxu_align:
+                util *= sz / hw.mxu_align
+        total += flops_per_visit * sched.trips(s) / max(util, 1e-9)
+    return total / hw.peak_flops
+
+
+def alpha(sched: Schedule, hw: TpuSpec = V5E) -> float:
+    n_grid = max(1, sched.grid_size())
+    return (n_grid + hw.pipeline_stages) / n_grid
+
+
+def estimate(sched: Schedule, hw: TpuSpec = V5E) -> float:
+    """Eq (2): estimated seconds for the fused kernel."""
+    return (t_mem(sched, hw) + t_comp(sched, hw)) * alpha(sched, hw)
+
+
+def vmem_estimate(sched: Schedule, hw: TpuSpec = V5E) -> int:
+    """Paper eq (1) adapted: per-grid-step VMEM residency in bytes."""
+    total = 0
+    chain = sched.chain
+    producers = chain.producers()
+    for s in sched.stmts:
+        tensor = chain.tensors[s.tensor]
+        if s.kind == "load":
+            tile = sched.visit_elems(s, tensor.dims) * tensor.dtype_bytes
+            total += 2 * tile  # double-buffered pipelined input
+        elif s.kind == "store":
+            total += sched.visit_elems(s, tensor.dims) * tensor.dtype_bytes
+        elif s.kind == "compute":
+            # fp32 accumulator for the produced tile
+            tile_elems = 1
+            for d in tensor.dims:
+                tile_elems *= sched.tile_sizes[d]
+            mult = sched.cached_intermediates.get(s.tensor, 1)
+            total += tile_elems * mult * DTYPE_BYTES["float32"]
+    return total
+
+
+def fits_vmem(sched: Schedule, hw: TpuSpec = V5E) -> bool:
+    return vmem_estimate(sched, hw) <= hw.vmem_slack * hw.vmem_bytes
+
+
+def roofline_bound(sched: Schedule, hw: TpuSpec = V5E) -> float:
+    """Lower bound on any schedule of this chain: ideal-fused IO at full
+    bandwidth vs chain flops at peak — whichever dominates."""
+    chain = sched.chain
+    return max(chain.fused_io_bytes() / hw.hbm_bw,
+               chain.total_flops() / hw.peak_flops)

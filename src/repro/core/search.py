@@ -1,0 +1,139 @@
+"""Heuristic exploration (paper §IV-B, Algorithm 1).
+
+Evolutionary search in which the *analytical* model (perf_model) ranks
+the population and only the top-n candidates are actually measured;
+mutation draws parents weighted by estimated speed; the loop terminates
+automatically once the best measured time stops improving by more than
+epsilon (no hand-set trial count — the paper's second enhancement over
+Ansor).
+
+`measure_fn` is pluggable:
+  * on real TPU: wall-clock the compiled fused kernel;
+  * in this CPU container: interpret-mode timing (trend-accurate) or the
+    analytical model itself ("analytic", default) for pure tuning runs.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from .chain import Chain
+from .dag import Schedule, build_schedule
+from .perf_model import TpuSpec, V5E, estimate, vmem_estimate
+from .pruning import PruneStats, generate_candidates, rule3_padding_ok
+from .tiling import candidate_tile_sizes
+
+
+MeasureFn = Callable[[Schedule], float]
+
+
+@dataclass
+class SearchReport:
+    best: Schedule
+    best_time: float
+    n_measured: int
+    n_iterations: int
+    n_candidates: int
+    prune_stats: dict
+    history: list[tuple[int, float]] = field(default_factory=list)
+
+
+def _mutate(sched: Schedule, chain: Chain, rng: random.Random,
+            unit: int, hw: TpuSpec) -> Optional[Schedule]:
+    """Mutate one loop's tile size (Algorithm 1 line 17)."""
+    loops = list(chain.loops)
+    for _ in range(8):
+        l = rng.choice(loops)
+        cands = candidate_tile_sizes(chain.loops[l], unit=unit)
+        if len(cands) <= 1:
+            continue
+        new = rng.choice(cands)
+        if new == sched.tile_sizes[l]:
+            continue
+        if not rule3_padding_ok(chain.loops[l], new, unit):
+            continue
+        ts = dict(sched.tile_sizes)
+        ts[l] = new
+        cand = build_schedule(chain, sched.expr, ts, hard_rule2=True)
+        if not cand.valid:
+            continue
+        if vmem_estimate(cand, hw) > hw.vmem_slack * hw.vmem_bytes:
+            continue
+        return cand
+    return None
+
+
+def heuristic_search(chain: Chain,
+                     measure_fn: Optional[MeasureFn] = None,
+                     hw: TpuSpec = V5E,
+                     population_size: int = 128,   # N
+                     topk: int = 8,                # n (paper: 8)
+                     epsilon: float = 0.01,        # convergence criterion
+                     max_iterations: int = 32,     # safety net only
+                     unit: int = 128,
+                     seed: int = 0) -> SearchReport:
+    """Algorithm 1.  Returns the best schedule + tuning telemetry."""
+    rng = random.Random(seed)
+    stats = PruneStats()
+    candidates = generate_candidates(chain, hw=hw, unit=unit, stats=stats)
+    if not candidates:
+        raise ValueError(f"no viable schedule for chain {chain.name}")
+    if measure_fn is None:
+        measure_fn = lambda s: estimate(s, hw)  # noqa: E731
+
+    population = (candidates if len(candidates) <= population_size
+                  else rng.sample(candidates, population_size))
+
+    best_t = math.inf
+    best: Optional[Schedule] = None
+    measured_cache: dict[tuple, float] = {}
+    n_measured = 0
+    history: list[tuple[int, float]] = []
+
+    for it in range(max_iterations):
+        est = [(estimate(s, hw), s) for s in population]
+        est.sort(key=lambda p: p[0])
+        top = [s for _, s in est[:topk]]
+
+        top1_t, top1 = math.inf, None
+        for s in top:
+            k = s.key()
+            if k not in measured_cache:
+                measured_cache[k] = measure_fn(s)
+                n_measured += 1
+            if measured_cache[k] < top1_t:
+                top1_t, top1 = measured_cache[k], s
+        history.append((it, min(top1_t, best_t)))
+
+        if best is not None and top1_t >= best_t * (1 - epsilon):
+            if top1_t < best_t:
+                best_t, best = top1_t, top1
+            break  # converged (lines 10-12)
+        if top1_t < best_t:
+            best_t, best = top1_t, top1
+
+        # next population: draw parents weighted by estimated speed
+        weights = [1.0 / max(e, 1e-12) for e, _ in est]
+        parents = rng.choices([s for _, s in est], weights=weights,
+                              k=population_size)
+        nxt: list[Schedule] = []
+        seen: set[tuple] = set()
+        for p in parents:
+            child = _mutate(p, chain, rng, unit, hw) or p
+            k = child.key()
+            if k not in seen:
+                seen.add(k)
+                nxt.append(child)
+        # keep elites so the best never regresses
+        for s in top:
+            if s.key() not in seen:
+                nxt.append(s)
+                seen.add(s.key())
+        population = nxt
+
+    assert best is not None
+    return SearchReport(best=best, best_time=best_t, n_measured=n_measured,
+                        n_iterations=it + 1, n_candidates=stats.n_kept,
+                        prune_stats=stats.as_dict(), history=history)

@@ -1,0 +1,124 @@
+"""Fused attention Pallas kernel (paper Table III workloads).
+
+The attention chain  S = Q K^T ; P = softmax(S) ; O = P V  is the flat
+schedule class ``n(k,h)`` with an online-softmax epilogue: the n (key)
+loop streams, the intermediate S tile lives only in VMEM, and the O row
+is accumulated with running max/denominator rescaling
+(Schedule.needs_rescale).  Unlike handwritten FlashAttention, the block
+sizes (bq, bkv) are chosen by MCFuser's analytical search for each
+concrete (M, N, D) — the paper's critique of FlashAttention is exactly
+that it fixes K == H and never tunes the reduction tiling.
+
+Supports GQA (kv-head sharing via BlockSpec index maps), causal and
+sliding-window masks, and decode (queries at the tail of the cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
+                 n_kv_blocks, bq, bkv, offset, causal, window, scale):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0]                       # (bq, d)
+    k = k_ref[0, 0]                       # (bkv, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+    if causal or window > 0:
+        i = pl.program_id(2)
+        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        cols = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = cols <= rows + offset
+        if window > 0:
+            mask &= cols > rows + offset - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[:, :1]                  # (bq, 1)
+    l_prev = l_sc[:, :1]
+    m_curr = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_curr)
+    p = jnp.exp(s - m_new)                # (bq, bkv)
+    corr = jnp.exp(m_prev - m_new)        # (bq, 1)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+
+    o_acc[...] = (o_acc[...] * corr
+                  + jnp.dot(p.astype(v_ref.dtype), v_ref[0, 0],
+                            preferred_element_type=jnp.float32))
+    m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+    l_sc[...] = jnp.broadcast_to(l_new, l_sc.shape)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _():
+        l = l_sc[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows
+        o_ref[0, 0] = (o_acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bq", "bkv", "causal", "window", "scale", "interpret"))
+def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    bq: int = 128, bkv: int = 128,
+                    causal: bool = False, window: int = 0,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """O = softmax(Q K^T * scale + mask) V, fused, GQA-aware.
+
+    q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv); Hq % Hkv == 0.
+    Queries sit at the *tail* of the kv sequence (decode-compatible).
+    """
+    b, hq, m, d = q.shape
+    _, hkv, n, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(bq, m)
+    bkv = min(bkv, n)
+    assert m % bq == 0 and n % bkv == 0, (m, n, bq, bkv)
+    offset = n - m
+    grid = (b, hq, m // bq, n // bkv)
+
+    kernel = functools.partial(
+        _attn_kernel, n_kv_blocks=n // bkv, bq=bq, bkv=bkv,
+        offset=offset, causal=causal, window=window, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bkv, dv),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, m, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the fused kernels.
+
+Backend dispatch: on TPU the Pallas kernel runs compiled; elsewhere
+either the interpret-mode kernel (exact same body, Python-evaluated —
+used by tests) or the XLA reference path (used by models during CPU
+dry-runs, where Pallas cannot lower).  Padding for non-dividing tiles
+happens here (Rule 3 keeps the overhead < 5%).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import api
+from . import ref
+from .attention import fused_attention as _attn_kernel
+from .gemm_chain import fused_gemm_chain as _gemm_kernel
+
+
+def _backend_mode(mode: str) -> str:
+    if mode != "auto":
+        return mode
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
+               mode: str = "auto", tuned: bool = True,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Fused E = (A@B)@D with MCFuser-tuned schedule.
+
+    mode: "auto" | "kernel" | "interpret" | "ref".
+    """
+    m = _backend_mode(mode)
+    if m == "ref":
+        return ref.gemm_chain_ref(a, b, d)
+    bsz, M, K = a.shape
+    N, H = b.shape[-1], d.shape[-1]
+    interp = (m == "interpret") if interpret is None else interpret
+    if tuned:
+        tk = api.fuse_gemm_chain(M, N, K, H, batch=bsz,
+                                 dtype=str(a.dtype), interpret=interp)
+        return tk(a, b, d)
+    return _gemm_kernel(a, b, d, interpret=interp)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = False, window: int = 0,
+              scale: Optional[float] = None,
+              mode: str = "auto", tuned: bool = True,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Fused GQA attention, MCFuser-tuned block schedule.
+
+    q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv).
+    """
+    m = _backend_mode(mode)
+    if m == "ref":
+        return ref.gqa_attention_ref(q, k, v, causal=causal,
+                                     window=window, scale=scale)
+    b, hq, M, D = q.shape
+    N, Dv = v.shape[-2], v.shape[-1]
+    interp = (m == "interpret") if interpret is None else interpret
+    if tuned:
+        tk = api.fuse_attention(M, N, D, Dv, heads=hq, batch=b,
+                                dtype=str(q.dtype), causal=causal,
+                                window=window, scale=scale,
+                                interpret=interp)
+        return tk(q, k, v)
+    return _attn_kernel(q, k, v, causal=causal, window=window,
+                        scale=scale, interpret=interp)

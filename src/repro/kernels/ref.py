@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *correctness* references (unfused, XLA-compiled) used by
+tests (assert_allclose sweeps) and by benchmarks as the un-fused
+baseline the paper compares against (its "PyTorch/CuBlas" role).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=())
+def gemm_chain_ref(a: jax.Array, b: jax.Array, d: jax.Array) -> jax.Array:
+    """E = (A @ B) @ D, accumulating in f32.  Shapes:
+    a: (..., M, K), b: (..., K, N), d: (..., N, H) -> (..., M, H)."""
+    c = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    e = jnp.matmul(c.astype(a.dtype), d, preferred_element_type=jnp.float32)
+    return e.astype(a.dtype)
+
+
+@partial(jax.jit, static_argnames=())
+def gemm_chain3_ref(a, b, d, f):
+    e = gemm_chain_ref(a, b, d)
+    g = jnp.matmul(e, f, preferred_element_type=jnp.float32)
+    return g.astype(a.dtype)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = False, window: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    """O = softmax(Q K^T * scale + mask) V, f32 softmax.
+
+    q: (B, M, D), k: (B, N, D), v: (B, N, Dv) -> (B, M, Dv).
+    window > 0 = sliding-window attention (causal implied for window)."""
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bmd,bnd->bmn", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m_idx = jnp.arange(q.shape[1])[:, None]
+    n_idx = jnp.arange(k.shape[1])[None, :]
+    offset = k.shape[1] - q.shape[1]  # decode: queries at the tail
+    if causal or window > 0:
+        mask = n_idx <= (m_idx + offset)
+        if window > 0:
+            mask &= n_idx > (m_idx + offset - window)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bmn,bnh->bmh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def gqa_attention_ref(q, k, v, causal=False, window=0, scale=None):
+    """GQA: q (B, Hq, M, D), k/v (B, Hkv, N, D). Hq % Hkv == 0."""
+    b, hq, m, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qf = q.reshape(b * hq, m, d)
+    kf = jnp.repeat(k, group, axis=1).reshape(b * hq, k.shape[2], d)
+    vf = jnp.repeat(v, group, axis=1).reshape(b * hq, v.shape[2], v.shape[3])
+    o = attention_ref(qf, kf, vf, causal=causal, window=window, scale=scale)
+    return o.reshape(b, hq, m, v.shape[3])

@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §6).
+
+compute    = HLO_FLOPs_per_device / peak_FLOPs
+memory     = HLO_bytes_per_device / HBM_bw
+collective = estimated per-device link traffic / ICI_bw
+
+cost_analysis() reports per-device flops / bytes on the forced-host
+backend (verified in a pilot run).  collective traffic is parsed from
+the optimized HLO: per op we apply ring-algorithm traffic formulas to
+the result shape and participant count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from dataclasses import dataclass, field
+
+# v5e constants (also in core.perf_model.TpuSpec — duplicated here so the
+# launch layer has no dependency on the tuner)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\s]*?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    result_bytes: dict = field(default_factory=dict)
+    traffic_bytes: float = 0.0      # per-device link traffic estimate
+
+    def as_dict(self) -> dict:
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "traffic_bytes": self.traffic_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:
+            continue  # start/done pairs: count the start only
+        kind = m.group(3)
+        rb = _shape_bytes(m.group(2))
+        if rb == 0:
+            continue
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 2
+        n = max(n, 2)
+        # ring traffic per device
+        if kind == "all-reduce":
+            traffic = 2.0 * rb * (n - 1) / n
+        elif kind == "all-gather":
+            traffic = rb * (n - 1) / n
+        elif kind == "reduce-scatter":
+            traffic = rb * (n - 1)          # result is the shard
+        elif kind == "all-to-all":
+            traffic = rb * (n - 1) / n
+        else:  # collective-permute
+            traffic = rb
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.result_bytes[kind] = stats.result_bytes.get(kind, 0) + rb
+        stats.traffic_bytes += traffic
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_traffic: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float = 0.0
+    useful_ratio: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost_analysis: dict, coll: CollectiveStats,
+                   model_flops_per_device: float = 0.0,
+                   peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+                   ici_bw: float = ICI_BW) -> Roofline:
+    flops = float(cost_analysis.get("flops", 0.0))
+    byts = float(cost_analysis.get("bytes accessed", 0.0))
+    compute_s = flops / peak_flops
+    memory_s = byts / hbm_bw
+    coll_s = coll.traffic_bytes / ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops_per_device / flops) if flops else 0.0
+    return Roofline(flops, byts, coll.traffic_bytes, compute_s, memory_s,
+                    coll_s, dominant, model_flops_per_device, useful)
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS per device: 6·N_active·D train, 2·N_active·D inference."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.batch
+    return total / n_devices
+
+
+def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
+    """Per-device HBM bytes of all attention layers when executed as the
+    MCFuser-tuned fused Pallas kernel (score tiles stay in VMEM).
+
+    Derived from the paper's analytical model (core.perf_model.t_mem) on
+    the schedule picked by core.search for this exact (M, N, dh) — the
+    tuner decides the production kernel's traffic, the dry-run only
+    replaces XLA's unfusable-interior accounting with it.
+
+    Returns (bytes, n_attention_instances).
+    """
+    from ..core import api
+    from ..core.perf_model import t_mem, V5E
+
+    if shape.kind == "decode":
+        return 0.0, 0
+    dh = cfg.dh
+    s = shape.seq
+    passes = 4.0 if shape.kind == "train" else 1.0  # fwd+remat+bwd(~2x)
+
+    def unit_bytes(m, n):
+        tk = api.fuse_attention(m, min(n, 128 * ((n + 127) // 128)), dh,
+                                dh, heads=1, batch=1, dtype=cfg.dtype)
+        return t_mem(tk.report.best, V5E) * V5E.hbm_bw
+
+    total = 0.0
+    count = 0
+    if cfg.family == "encdec":
+        t = cfg.encoder.n_frames
+        t_pad = 128 * ((t + 127) // 128)
+        hb = shape.batch * cfg.n_heads / n_dev
+        total += unit_bytes(t_pad, t_pad) * hb * cfg.encoder.n_layers
+        total += unit_bytes(s, s) * hb * cfg.n_layers          # dec self
+        total += unit_bytes(s, t_pad) * hb * cfg.n_layers      # cross
+        count = cfg.encoder.n_layers + 2 * cfg.n_layers
+    else:
+        pat = list(cfg.pattern)
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if pat[i % len(pat)] == "attn")
+        if n_attn == 0:
+            return 0.0, 0
+        win = cfg.window or (cfg.rglru.local_window if cfg.rglru else 0)
+        n_kv = min(s, win) if win else s
+        hb = shape.batch * cfg.n_heads / n_dev
+        total = unit_bytes(s, n_kv) * hb * n_attn
+        count = n_attn
+    return total * passes, count

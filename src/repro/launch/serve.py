@@ -1,0 +1,83 @@
+"""Serving driver: batched prefill + greedy decode over a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ALIASES, ARCHS, get_config
+from ..dist.sharding import Rules
+from ..models.lm import Runtime
+from . import steps as S
+from .mesh import make_host_mesh
+
+
+def generate(model, params, prompts: jax.Array, gen: int,
+             frames=None, prefix_embeds=None) -> np.ndarray:
+    """Greedy generation; prompts: (B, P) int32."""
+    b, plen = prompts.shape
+    extra = (frames.shape[1] if frames is not None else
+             (prefix_embeds.shape[1] if prefix_embeds is not None else 0))
+    cache = model.init_cache(b, plen + extra + gen)
+    if frames is not None:
+        logits, cache = jax.jit(model.prefill)(params, prompts, cache,
+                                               frames)
+    elif prefix_embeds is not None:
+        logits, cache = jax.jit(model.prefill)(params, prompts, cache,
+                                               prefix_embeds=prefix_embeds)
+    else:
+        logits, cache = jax.jit(model.prefill)(params, prompts, cache)
+    decode = jax.jit(model.decode_step)
+    out = [jnp.argmax(logits, -1)]
+    pos = plen + extra
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, out[-1],
+                               jnp.int32(pos + i))
+        out.append(jnp.argmax(logits, -1))
+    return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b",
+                    choices=sorted(ALIASES) + ARCHS)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    model = S.build_model(cfg, Runtime(remat=False))
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.n_prefix_embeds:
+        kwargs["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.n_prefix_embeds, cfg.d_model))
+
+    t0 = time.perf_counter()
+    tokens = generate(model, params, prompts, args.gen, **kwargs)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} generated {tokens.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", tokens[0][:16].tolist())
+    return tokens
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""AdamW with fp32 master weights + cosine LR schedule + global-norm
+clipping, pure JAX (no optax in this environment).
+
+Optimizer state mirrors the parameter pytree leaf-for-leaf, so ZeRO-1
+sharding falls out of giving state leaves the same PartitionSpec as
+their parameter (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> dict:
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            # explicit copy: for f32 params astype() aliases the same
+            # buffer and jit donation would see it twice
+            "master": jax.tree.map(
+                lambda p: jnp.array(p, dtype=jnp.float32), params),
+        }
+
+    def abstract_state(self, abstract_params) -> dict:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": jax.tree.map(f32, abstract_params),
+            "v": jax.tree.map(f32, abstract_params),
+            "master": jax.tree.map(f32, abstract_params),
+        }
+
+    def state_specs(self, param_specs) -> dict:
+        from jax.sharding import PartitionSpec as P
+        return {"step": P(), "m": param_specs, "v": param_specs,
+                "master": param_specs}
+
+    def update(self, params, grads, state
+               ) -> tuple[Any, dict, dict[str, jax.Array]]:
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, w):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh, vh = m / bc1, v / bc2
+            w = w - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                          + self.weight_decay * w)
+            return m, v, w
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = treedef.flatten_up_to(state["master"])
+        new_m, new_v, new_w, new_p = [], [], [], []
+        for g, m, v, w, pref in zip(flat_g, flat_m, flat_v, flat_w, flat_p):
+            m2, v2, w2 = upd(g, m, v, w)
+            new_m.append(m2)
+            new_v.append(v2)
+            new_w.append(w2)
+            new_p.append(w2.astype(pref.dtype))
+        new_state = {"step": step,
+                     "m": jax.tree.unflatten(treedef, new_m),
+                     "v": jax.tree.unflatten(treedef, new_v),
+                     "master": jax.tree.unflatten(treedef, new_w)}
+        new_params = jax.tree.unflatten(treedef, new_p)
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

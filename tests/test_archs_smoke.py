@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
++ train step on CPU, shape and NaN checks, decode==forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch import steps as S
+from repro.models.lm import Runtime
+
+BATCH, SEQ = 2, 64
+
+
+def _batch_for(cfg, rng=1):
+    toks = jax.random.randint(jax.random.PRNGKey(rng), (BATCH, SEQ), 0,
+                              cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (BATCH, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (BATCH, cfg.n_prefix_embeds, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = S.build_model(cfg, Runtime(remat=False))
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+
+    if cfg.family == "encdec":
+        logits = jax.jit(model.forward)(params, batch["tokens"],
+                                        batch["frames"])
+        assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    else:
+        logits = jax.jit(model.forward)(
+            params, batch["tokens"], batch.get("prefix_embeds"))
+        exp = SEQ + cfg.n_prefix_embeds
+        assert logits.shape == (BATCH, exp, cfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+    opt = S.default_optimizer()
+    opt_state = opt.init(params)
+    train_step = jax.jit(S.make_train_step(model, opt))
+    params2, opt_state, info = train_step(params, opt_state, batch)
+    assert np.isfinite(float(info["loss"]))
+    assert np.isfinite(float(info["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_consistency(arch):
+    cfg = get_config(arch, smoke=True)
+    model = S.build_model(cfg, Runtime(remat=False))
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    toks = batch["tokens"]
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["frames"] = batch["frames"]
+    elif cfg.n_prefix_embeds:
+        kwargs["prefix_embeds"] = batch["prefix_embeds"]
+
+    n_pre = cfg.n_prefix_embeds if cfg.family != "encdec" else 0
+    cache = model.init_cache(BATCH, SEQ + n_pre + 8)
+    lg, cache = jax.jit(model.prefill)(params, toks[:, :-1], cache, **kwargs)
+    lg2, cache = jax.jit(model.decode_step)(
+        params, cache, toks[:, -1], jnp.int32(SEQ - 1 + n_pre))
+    if cfg.family == "encdec":
+        full = model.forward(params, toks, batch["frames"])
+    else:
+        full = model.forward(params, toks, batch.get("prefix_embeds"))
+    err = np.max(np.abs(np.asarray(lg2, np.float32)
+                        - np.asarray(full[:, -1], np.float32)))
+    # MoE capacity dropping differs between batched and incremental
+    # execution by design; recurrences tolerate scan-order fp drift
+    tol = 0.5 if cfg.moe else 2e-2
+    assert err < tol, f"decode/forward mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ["mamba2_1p3b", "recurrentgemma_2b",
+                                  "mixtral_8x7b"])
+def test_multistep_decode(arch):
+    """Sub-quadratic archs must decode step-by-step beyond the prefill."""
+    cfg = get_config(arch, smoke=True)
+    model = S.build_model(cfg, Runtime(remat=False))
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 48), 0, cfg.vocab)
+    cache = model.init_cache(1, 64)
+    lg, cache = jax.jit(model.prefill)(params, toks[:, :40], cache)
+    dec = jax.jit(model.decode_step)
+    for t in range(40, 48):
+        lg, cache = dec(params, cache, toks[:, t], jnp.int32(t))
+    full = model.forward(params, toks)
+    err = np.max(np.abs(np.asarray(lg, np.float32)
+                        - np.asarray(full[:, -1], np.float32)))
+    assert err < 0.5 if cfg.moe else err < 2e-2
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published hyperparameters."""
+    spec = {
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304),
+        "qwen3_8b": (36, 4096, 32, 8, 12288, 151936),
+        "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+        "codeqwen15_7b": (32, 4096, 32, 32, 13440, 92416),
+        "granite_34b": (88, 6144, 48, 1, 24576, 49152),
+        "mamba2_1p3b": (48, 2048, 1, 1, 0, 50280),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (nl, d, h, kv, ff, v), arch
+    assert get_config("mixtral_8x7b").moe.n_experts == 8
+    assert get_config("mixtral_8x7b").moe.top_k == 2
+    assert get_config("mixtral_8x7b").window == 4096
+    assert get_config("olmoe_1b_7b").moe.n_experts == 64
+    assert get_config("olmoe_1b_7b").moe.top_k == 8
+    assert get_config("mamba2_1p3b").ssm.d_state == 128
+    assert get_config("recurrentgemma_2b").pattern == ("rglru", "rglru",
+                                                       "attn")

@@ -1,0 +1,121 @@
+"""DAG analysis / memory hoisting (paper §III-B, Figs. 4-6)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chain import gemm_chain
+from repro.core.dag import build_schedule
+from repro.core.perf_model import V5E, estimate, t_comp, t_mem, vmem_estimate
+from repro.core.tiling import deep_tiling, flat_tiling
+
+
+TS = {"m": 128, "n": 128, "k": 128, "h": 128}
+CH = gemm_chain(1024, 1024, 512, 512)
+
+
+def _stmt(sched, kind, tensor):
+    for s in sched.stmts:
+        if s.kind == kind and s.tensor == tensor:
+            return s
+    raise KeyError((kind, tensor))
+
+
+def test_fig4a_store_hoisted_out_of_reduction():
+    s = build_schedule(CH, deep_tiling("mhnk"), TS)
+    store = _stmt(s, "store", "E")
+    # hoisted out of n and k: trips = extent(m) * extent(h)
+    assert store.path == ("m", "h")
+    assert s.trips(store) == 8 * 4
+
+
+def test_fig4b_dead_loop_enables_deep_hoist():
+    ts = dict(TS, k=512)  # tile == K -> extent(k) == 1 -> dead node
+    s = build_schedule(CH, deep_tiling("mhnk"), ts)
+    load_a = _stmt(s, "load", "A")
+    # L_A escapes h and n entirely (paper: cost / (h*n))
+    assert load_a.path == ("m",)
+    assert s.trips(load_a) == 8
+    # per-visit volume covers the full K extent
+    assert s.visit_elems(load_a, ("m", "k")) == 128 * 512
+
+
+def test_redundant_compute_is_charged():
+    """Deep mhnk recomputes C per h-block; flat mn(k,h) computes C once.
+    The model must charge the difference (the paper's critique of
+    Chimera)."""
+    deep = build_schedule(CH, deep_tiling("mhnk"), TS)
+    flat = build_schedule(CH, flat_tiling("mn", [("k",), ("h",)]), TS)
+    assert t_comp(deep, V5E) > t_comp(flat, V5E) * 2
+
+
+def test_flat_preserves_h_inside_block():
+    flat = build_schedule(CH, flat_tiling("mn", [("k",), ("h",)]), TS)
+    assert flat.grid == ("m",)
+    assert "(" in flat.sub_expr()
+
+
+def test_kn_class_caches_intermediate_tiles():
+    s = build_schedule(CH, deep_tiling("mhkn"), TS, hard_rule2=False)
+    # consumer E hoisted out of producer reduction k: every n-tile of C
+    # must be cached (Fig. 6b)
+    assert s.cached_intermediates.get("C", 1) == 1024 // 128
+    s2 = build_schedule(CH, deep_tiling("mhkn"), TS, hard_rule2=True)
+    assert not s2.valid
+
+
+def test_vmem_estimate_blows_up_for_kn():
+    ok = build_schedule(CH, deep_tiling("mhnk"), TS)
+    kn = build_schedule(CH, deep_tiling("mhkn"), TS)
+    assert vmem_estimate(kn, V5E) > vmem_estimate(ok, V5E)
+
+
+@given(
+    m=st.sampled_from([256, 512, 1024]),
+    n=st.sampled_from([256, 512, 1024]),
+    k=st.sampled_from([64, 128, 512]),
+    h=st.sampled_from([64, 128, 512]),
+    tm=st.sampled_from([128, 256]),
+    tn=st.sampled_from([128, 256]),
+)
+@settings(max_examples=40, deadline=None)
+def test_schedule_invariants(m, n, k, h, tm, tn):
+    ch = gemm_chain(m, n, k, h)
+    ts = {"m": min(tm, m), "n": min(tn, n), "k": min(128, k),
+          "h": min(128, h)}
+    for expr in (deep_tiling("mhnk"), deep_tiling("mnkh"),
+                 flat_tiling("mn", [("k",), ("h",)])):
+        s = build_schedule(ch, expr, ts)
+        if not s.valid:
+            continue
+        # every statement's path loops exist and are unique
+        for st_ in s.stmts:
+            assert len(set(st_.path)) == len(st_.path)
+            assert s.trips(st_) >= 1
+        # memory statements never sit inside loops that do not index
+        # their tensor unless that loop also encloses the grid
+        for st_ in s.stmts:
+            if st_.kind in ("load", "store") and st_.path:
+                innermost = st_.path[-1]
+                tensor_dims = ch.tensors[st_.tensor].dims
+                assert innermost in tensor_dims
+        # analytical terms are positive and finite
+        assert 0 < estimate(s, V5E) < math.inf
+        assert t_mem(s, V5E) > 0
+
+
+@given(k=st.sampled_from([64, 128, 256, 512]))
+@settings(max_examples=10, deadline=None)
+def test_dead_loop_hoisting_never_increases_traffic(k):
+    """Making k dead (full tile) must not increase L_A traffic."""
+    ch = gemm_chain(1024, 1024, k, 512)
+    tiled = build_schedule(ch, deep_tiling("mhnk"),
+                           {"m": 128, "n": 128, "k": min(64, k), "h": 128})
+    dead = build_schedule(ch, deep_tiling("mhnk"),
+                          {"m": 128, "n": 128, "k": k, "h": 128})
+
+    def la_traffic(s):
+        st_ = _stmt(s, "load", "A")
+        return s.trips(st_) * s.visit_elems(st_, ("m", "k"))
+
+    assert la_traffic(dead) <= la_traffic(tiled)

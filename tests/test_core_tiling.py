@@ -1,0 +1,88 @@
+"""Search-space generation invariants (paper §III-A, Fig. 7)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chain import attention_chain, gemm_chain, gemm_chain3
+from repro.core.dag import build_schedule
+from repro.core.pruning import (PruneStats, expression_classes,
+                                generate_candidates, rule3_padding_ok)
+from repro.core.tiling import (candidate_tile_sizes, deep_tiling,
+                               enumerate_tilings, expr_repr,
+                               search_space_size)
+
+
+def test_gemm_chain_expression_count_matches_paper():
+    # 4 loops: 4! deep + 2 flat = 26 (paper §III-A)
+    ch = gemm_chain(1024, 1024, 512, 512)
+    assert len(enumerate_tilings(ch)) == 26
+
+
+def test_paper_raw_search_space_size():
+    # paper: (24+2) * ceil(1024/16)^2 * ceil(512/16)^2 = 109,051,904
+    ch = gemm_chain(1024, 1024, 512, 512)
+    assert search_space_size(ch, unit=16) == 109_051_904
+
+
+def test_three_gemm_chain_extends():
+    ch = gemm_chain3(512, 512, 256, 256, 256)
+    exprs = enumerate_tilings(ch)
+    # 5! deep + 3! perms of the shared loops (m,n,h) x 1 per-group perm
+    assert len(exprs) == math.factorial(5) + math.factorial(3)
+    # flat tilings have sequential groups
+    assert any("(" in expr_repr(e) for e in exprs)
+
+
+def test_rule1_classes():
+    ch = gemm_chain(1024, 1024, 512, 512)
+    classes = expression_classes(ch)
+    # deep nk, deep kn (Rule-2 fodder), flat n(k,h)
+    assert set(classes) == {"nk", "kn", "n(k,h)"}
+
+
+def test_pruning_reduction_is_four_orders():
+    ch = gemm_chain(1024, 1024, 512, 512)
+    stats = PruneStats()
+    cands = generate_candidates(ch, unit=16, stats=stats)
+    assert stats.n_total > 1e8
+    assert 0 < stats.n_kept < 1e5          # paper: 1e8 -> 1e4
+    assert stats.n_rule2 > 0               # kn class pruned
+    assert stats.n_rule3 > stats.n_total * 0.9
+
+
+def test_candidates_unique_by_key():
+    ch = gemm_chain(256, 256, 128, 128)
+    cands = generate_candidates(ch, unit=128)
+    keys = [c.key() for c in cands]
+    assert len(keys) == len(set(keys))
+
+
+@given(dim=st.integers(min_value=1, max_value=4096),
+       unit=st.sampled_from([16, 128]))
+@settings(max_examples=50, deadline=None)
+def test_candidate_tile_sizes_properties(dim, unit):
+    cands = candidate_tile_sizes(dim, unit=unit)
+    assert cands, "at least one candidate (the full dim)"
+    assert all(1 <= t <= dim for t in cands)
+    if dim > unit:
+        assert all(t % unit == 0 or t == dim for t in cands)
+    else:
+        assert cands == [dim]
+
+
+@given(st.integers(min_value=17, max_value=2048))
+@settings(max_examples=50, deadline=None)
+def test_rule3_divisor_tiles_always_ok(dim):
+    for t in range(16, dim + 1, 16):
+        if dim % t == 0:
+            assert rule3_padding_ok(dim, t, unit=16)
+
+
+def test_attention_chain_classes_and_rescale():
+    ch = attention_chain(512, 512, 64, 64)
+    classes = expression_classes(ch)
+    assert "nk" in classes and "n(k,h)" in classes
+    s = build_schedule(ch, deep_tiling("mhnk"),
+                       {"m": 128, "n": 128, "k": 64, "h": 64})
+    assert s.valid and s.needs_rescale  # streaming online softmax

@@ -1,0 +1,164 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import fused_attention
+from repro.kernels.gemm_chain import fused_gemm_chain
+from repro.kernels.ref import (attention_ref, gemm_chain_ref,
+                               gqa_attention_ref)
+from repro.kernels import ops
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+TOL_BF16 = dict(rtol=3e-2, atol=3e-2)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+@pytest.mark.parametrize("style", ["flat", "deep"])
+@pytest.mark.parametrize("shape", [
+    (1, 256, 256, 128, 128),     # B, M, N, K, H
+    (2, 256, 128, 256, 128),
+    (1, 512, 256, 64, 64),       # paper G1-ish (MBCI: small K/H)
+    (1, 128, 512, 128, 256),
+])
+def test_gemm_chain_shapes(style, shape):
+    b, m, n, k, h = shape
+    a = _rand(0, (b, m, k), jnp.float32)
+    bm = _rand(1, (b, k, n), jnp.float32)
+    d = _rand(2, (b, n, h), jnp.float32)
+    out = fused_gemm_chain(a, bm, d, bm=128, bn=128, bk=64, bh=64,
+                           style=style, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gemm_chain_ref(a, bm, d)), **TOL)
+
+
+@pytest.mark.parametrize("style", ["flat", "deep"])
+def test_gemm_chain_bf16(style):
+    a = _rand(0, (1, 256, 128), jnp.bfloat16)
+    b = _rand(1, (1, 128, 256), jnp.bfloat16)
+    d = _rand(2, (1, 256, 128), jnp.bfloat16)
+    out = fused_gemm_chain(a, b, d, style=style, interpret=True)
+    ref = gemm_chain_ref(a, b, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL_BF16)
+
+
+@pytest.mark.parametrize("tile", [(64, 64), (128, 128), (128, 64), (256, 128)])
+def test_gemm_chain_tile_sweep(tile):
+    bm, bn = tile
+    a = _rand(0, (1, 256, 128), jnp.float32)
+    b = _rand(1, (1, 128, 256), jnp.float32)
+    d = _rand(2, (1, 256, 128), jnp.float32)
+    out = fused_gemm_chain(a, b, d, bm=bm, bn=bn, bk=64, bh=64,
+                           style="flat", interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gemm_chain_ref(a, b, d)), **TOL)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(b=1, hq=4, hkv=4, m=256, n=256, d=64, dv=64, causal=False, window=0),
+    dict(b=2, hq=4, hkv=2, m=256, n=256, d=64, dv=64, causal=True, window=0),
+    dict(b=1, hq=4, hkv=1, m=256, n=256, d=128, dv=128, causal=True,
+         window=128),
+    dict(b=1, hq=2, hkv=2, m=128, n=512, d=64, dv=64, causal=True, window=0),
+    dict(b=1, hq=2, hkv=1, m=256, n=256, d=80, dv=80, causal=False, window=0),
+])
+def test_attention_shapes(cfg):
+    q = _rand(0, (cfg["b"], cfg["hq"], cfg["m"], cfg["d"]), jnp.float32)
+    k = _rand(1, (cfg["b"], cfg["hkv"], cfg["n"], cfg["d"]), jnp.float32)
+    v = _rand(2, (cfg["b"], cfg["hkv"], cfg["n"], cfg["dv"]), jnp.float32)
+    out = fused_attention(q, k, v, bq=128, bkv=128, causal=cfg["causal"],
+                          window=cfg["window"], interpret=True)
+    ref = gqa_attention_ref(q, k, v, causal=cfg["causal"],
+                            window=cfg["window"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 256), (256, 64)])
+def test_attention_block_sweep(blocks):
+    bq, bkv = blocks
+    q = _rand(0, (1, 2, 256, 64), jnp.float32)
+    k = _rand(1, (1, 2, 256, 64), jnp.float32)
+    v = _rand(2, (1, 2, 256, 64), jnp.float32)
+    out = fused_attention(q, k, v, bq=bq, bkv=bkv, causal=True,
+                          interpret=True)
+    ref = gqa_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_attention_bf16():
+    q = _rand(0, (1, 2, 256, 64), jnp.bfloat16)
+    k = _rand(1, (1, 2, 256, 64), jnp.bfloat16)
+    v = _rand(2, (1, 2, 256, 64), jnp.bfloat16)
+    out = fused_attention(q, k, v, causal=True, interpret=True)
+    ref = gqa_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL_BF16)
+
+
+def test_ops_tuned_dispatch():
+    """ops.* run the MCFuser-tuned schedule end to end."""
+    a = _rand(0, (1, 512, 256), jnp.float32)
+    b = _rand(1, (1, 256, 512), jnp.float32)
+    d = _rand(2, (1, 512, 256), jnp.float32)
+    out = ops.gemm_chain(a, b, d, mode="interpret")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gemm_chain_ref(a, b, d)), **TOL)
+
+    q = _rand(3, (1, 4, 256, 64), jnp.float32)
+    k = _rand(4, (1, 2, 256, 64), jnp.float32)
+    v = _rand(5, (1, 2, 256, 64), jnp.float32)
+    out = ops.attention(q, k, v, causal=True, mode="interpret")
+    ref = gqa_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_streaming_xla_twin_matches_kernel():
+    """models.layers.streaming_attention (the dry-run XLA path) must be
+    numerically the same algorithm as the Pallas kernel."""
+    from repro.models.layers import streaming_attention
+    q = _rand(0, (1, 2, 256, 64), jnp.float32)
+    k = _rand(1, (1, 2, 256, 64), jnp.float32)
+    v = _rand(2, (1, 2, 256, 64), jnp.float32)
+    kern = fused_attention(q, k, v, bq=128, bkv=64, causal=True,
+                           interpret=True)
+    twin = streaming_attention(q, k, v, causal=True, window=0,
+                               scale=64 ** -0.5, bkv=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(twin), **TOL)
+
+
+def test_gemm_chain3_matches_oracle():
+    """Three-GEMM fused kernel (chain generality beyond the paper's
+    2-op examples)."""
+    from repro.kernels.gemm_chain3 import fused_gemm_chain3
+    from repro.kernels.ref import gemm_chain3_ref
+    a = _rand(0, (2, 256, 128), jnp.float32)
+    b = _rand(1, (2, 128, 256), jnp.float32)
+    d = _rand(2, (2, 256, 64), jnp.float32)
+    f = _rand(3, (2, 64, 64), jnp.float32)
+    out = fused_gemm_chain3(a, b, d, f, bm=128, bn=128, bk=64,
+                            interpret=True)
+    ref = gemm_chain3_ref(a, b, d, f)
+    # triple-chained magnitudes ~1e3: relative tolerance dominates
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("tiles", [(64, 128, 128), (128, 64, 64)])
+def test_gemm_chain3_tile_sweep(tiles):
+    from repro.kernels.gemm_chain3 import fused_gemm_chain3
+    from repro.kernels.ref import gemm_chain3_ref
+    bm, bn, bk = tiles
+    a = _rand(0, (1, 128, 128), jnp.float32)
+    b = _rand(1, (1, 128, 128), jnp.float32)
+    d = _rand(2, (1, 128, 128), jnp.float32)
+    f = _rand(3, (1, 128, 64), jnp.float32)
+    out = fused_gemm_chain3(a, b, d, f, bm=bm, bn=bn, bk=bk,
+                            interpret=True)
+    ref = gemm_chain3_ref(a, b, d, f)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-2)
