@@ -1,0 +1,115 @@
+"""JAX API-compatibility shims.
+
+The codebase is written against the post-0.6 JAX surface
+(``jax.set_mesh`` / ``jax.shard_map`` / ``jax.sharding.AxisType`` /
+``pltpu.CompilerParams``); the pinned toolchain ships jax 0.4.37.
+Each shim is installed only when the real API is missing, so a future
+toolchain upgrade disables them without code changes.
+
+Imported for its side effects from ``repro/__init__.py`` — any
+``import repro.<anything>`` makes the whole surface available before
+driver or test code touches a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+from typing import Optional
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - C-level signature
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        del axis_types  # 0.4.x meshes have no axis-type annotations
+        return orig(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        # Mesh is itself a context manager in 0.4.x: entering it sets
+        # the thread-local resource env, which is what makes
+        # with_sharding_constraint accept bare PartitionSpecs.
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None and "check_rep" not in kw:
+            kw["check_rep"] = check_vma  # renamed upstream
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_pallas_compiler_params() -> None:
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except Exception:  # pragma: no cover - pallas not bundled
+        return
+    if not hasattr(pltpu, "CompilerParams") \
+            and hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """The ambient physical mesh set by ``jax.set_mesh`` (None if unset).
+
+    Used by ``dist.sharding.constrain`` to decide whether a sharding
+    constraint can be applied at all.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:  # post-0.6: explicit ambient-mesh API
+        mesh = get_abstract()
+        return None if mesh is None or mesh.empty else mesh
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_set_mesh()
+    _install_shard_map()
+    _install_pallas_compiler_params()
+
+
+install()

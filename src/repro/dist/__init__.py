@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules + gradient compression.
+
+``repro.dist.sharding`` is the single place where logical tensor axes
+("data" / "model" / "tp" / "seq" / "batch") are mapped onto physical
+mesh axes; model and launch code never name mesh axes directly.
+"""
+from .sharding import Rules, constrain  # noqa: F401

@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules (the repo's partitioning DSL).
+
+Model code describes tensors with *logical* axis names; a ``Rules``
+instance maps them to physical mesh axes:
+
+    weight specs (``Rules.spec``):
+        "data"   -> the FSDP axes (``rules.data``); resolves to None
+                    when ``fsdp=False`` (resident TP weights)
+        "model"  -> the tensor/expert-parallel mesh axis
+        "tp"     -> the activation tensor-parallel axis
+        None     -> replicated
+
+    activation constraints (``constrain``):
+        "batch"  -> ``rules.batch_axes or rules.data`` (dropping axes
+                    that do not divide the dimension)
+        "seq"    -> ``rules.seq`` (sequence parallelism)
+        "tp"     -> ``rules.tp``
+        None     -> unconstrained
+
+Why a DSL at all: FusionStitching-style global data-placement planning
+only works when every layer states *intent* ("this dim is batch-like")
+instead of hard-coding mesh axes — swapping the whole parallelism
+regime (ZeRO-3 vs TP+SP vs TP, see launch/dryrun.py) is then a single
+``Rules(...)`` literal, and the fused MCFuser kernels see consistently
+placed operands on every regime.
+
+Everything degrades to a no-op when rules are disabled or no mesh is
+ambient, so single-device tests and the multi-pod dry-run share one
+model implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .. import _compat
+
+AxisName = Union[str, Sequence[str], None]
+
+_LOGICAL_AXES = (None, "batch", "seq", "tp", "model", "data")
+
+
+def _as_tuple(axes: AxisName) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mapping from logical tensor axes to physical mesh axes.
+
+    data:       mesh axes carrying data parallelism; also the FSDP
+                weight-sharding axes while ``fsdp`` is True.
+    model:      mesh axis for tensor/expert parallel weight shards.
+    tp:         mesh axis for activation tensor parallelism (None in
+                the ZeRO-3 regime: weights gather, activations stay
+                replicated across the model axis).
+    seq:        mesh axis for sequence parallelism on the residual
+                stream (Megatron-SP), or None.
+    batch_axes: override for batch-dim placement; defaults to ``data``
+                (ZeRO-3 rides the batch over every axis).
+    fsdp:       when False, "data" in weight specs resolves to None so
+                TP weight shards stay resident (decode regime).
+    """
+
+    data: tuple[str, ...] = ()
+    model: Optional[str] = None
+    tp: Optional[str] = None
+    seq: Optional[str] = None
+    batch_axes: Optional[tuple[str, ...]] = None
+    fsdp: bool = True
+
+    @classmethod
+    def disabled(cls) -> "Rules":
+        """Rules under which every spec is fully replicated and
+        ``constrain`` is the identity (single-device execution)."""
+        return cls()
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.data) or self.model is not None
+
+    # ------------------------------------------------------------------
+    # logical-axis resolution
+    # ------------------------------------------------------------------
+    def _resolve(self, name: Optional[str]) -> AxisName:
+        if name is None:
+            return None
+        if name == "data":
+            return (self.data or None) if self.fsdp else None
+        if name == "model":
+            return self.model
+        if name == "tp":
+            return self.tp
+        if name == "seq":
+            return self.seq
+        if name == "batch":
+            return tuple(self.batch_axes or self.data) or None
+        raise ValueError(f"unknown logical axis {name!r}; expected one of "
+                         f"{_LOGICAL_AXES}")
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a weight whose dims carry the given logical
+        axes.  ``rules.spec("data", "model")`` on a (D, F) projection
+        FSDP-shards D and tensor-shards F; disabled rules replicate."""
+        if not self.enabled:
+            return P(*(None,) * len(logical))
+        return P(*(self._resolve(name) for name in logical))
+
+    def batch_spec(self, batch: int, mesh: Optional[jax.sharding.Mesh]) -> P:
+        """Placement of a leading batch dimension of size ``batch``.
+
+        Returns a length-1 PartitionSpec whose entry is the tuple of
+        mesh axes the batch dim shards over, or an empty spec when the
+        batch cannot be sharded.  Degrades gracefully: axes are dropped
+        from the right until their combined size divides ``batch``, so
+        a batch of 4 on a (data=2, model=4) mesh still shards over
+        data instead of failing.
+        """
+        if not self.enabled or mesh is None:
+            return P()
+        axes = _divisible_axes(self, mesh, "batch", batch)
+        return P(axes) if axes else P()
+
+
+def _divisible_axes(rules: Rules, mesh, name: Optional[str],
+                    dim: int) -> tuple[str, ...]:
+    """Mesh axes for one tensor dim, dropping axes (from the right)
+    that the dim's size cannot absorb evenly — keeps placements valid
+    on smoke-sized tensors and partially-covering batches."""
+    axes = tuple(a for a in _as_tuple(rules._resolve(name))
+                 if a in mesh.shape and mesh.shape[a] > 1)
+    while axes and dim % math.prod(mesh.shape[a] for a in axes):
+        axes = axes[:-1]
+    return axes
+
+
+def _dim_axes(rules: Rules, mesh: jax.sharding.Mesh,
+              name: Optional[str], dim: int) -> AxisName:
+    axes = _divisible_axes(rules, mesh, name, dim)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x: jax.Array, rules: Rules,
+              *logical: Optional[str]) -> jax.Array:
+    """Apply ``jax.lax.with_sharding_constraint`` mapping each of ``x``'s
+    dims through the rules' logical-axis table.
+
+    No-op when rules are disabled or no mesh is ambient (set via
+    ``jax.set_mesh``), so the same model code traces unchanged on a
+    single device.  Logical names beyond ``x.ndim`` are ignored;
+    unnamed trailing dims are unconstrained.
+    """
+    if rules is None or not rules.enabled:
+        return x
+    mesh = _compat.current_mesh()
+    if mesh is None:
+        return x
+    entries = [_dim_axes(rules, mesh, name, dim)
+               for dim, name in zip(x.shape, logical)]
+    entries += [None] * (x.ndim - len(entries))
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -10,7 +10,9 @@ from repro.kernels.ref import (attention_ref, gemm_chain_ref,
                                gqa_attention_ref)
 from repro.kernels import ops
 
-TOL = dict(rtol=3e-4, atol=3e-4)
+# atol covers f32 accumulation-order differences between the blocked
+# kernel and XLA's matmul on near-zero elements of ~256-magnitude outputs
+TOL = dict(rtol=3e-4, atol=1e-3)
 TOL_BF16 = dict(rtol=3e-2, atol=3e-2)
 
 
