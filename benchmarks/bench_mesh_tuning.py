@@ -1,0 +1,81 @@
+"""Mesh-aware tuning: tile picks and time terms per parallelism regime.
+
+For each workload, tune the fused GEMM chain for three regimes and
+report what moved (docs/tuning.md worked example, generalized):
+
+  * single   — the paper's single-chip model (eq 2)
+  * dp2xtp4  — batch over data=2, output features over model=4
+               (the regime kernels/ops.py dispatches; collective-free,
+               tile pick moves through localization)
+  * ring4    — reduction loop n over model=4 (ring decomposition);
+               the collective term prices the partial-sum all-reduce
+
+`changed` marks workloads where the mesh regime picks a different
+schedule (tile sizes or class) than the single-chip tuner — the
+reason the mesh must be visible to the search, not applied after it.
+"""
+import time
+
+from repro.core.chain import gemm_chain
+from repro.core.perf_model import (MeshSpec, V5E, alpha, estimate, t_comp,
+                                   t_mem, t_coll)
+from repro.core.search import heuristic_search
+
+from .workloads import GEMM_CHAINS
+
+REGIMES = {
+    "single": lambda: None,
+    "dp2xtp4": lambda: MeshSpec(axes=(("data", 2), ("model", 4)),
+                                placement=(("h", "model"),),
+                                batch_axes=("data",)),
+    "ring4": lambda: MeshSpec(axes=(("model", 4),),
+                              placement=(("n", "model"),)),
+}
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, (b, m, n, k, h) in list(GEMM_CHAINS.items()):
+        ch = gemm_chain(m, n, k, h, batch=b, dtype="bfloat16")
+        picks = {}
+        for regime, make in REGIMES.items():
+            mesh = make()
+            t0 = time.perf_counter()
+            rep = heuristic_search(ch, mesh=mesh, seed=0)
+            dt = time.perf_counter() - t0
+            s = rep.best
+            picks[regime] = {
+                "tiles": dict(s.tile_sizes), "expr": s.sub_expr(),
+                "t_mem": t_mem(s, V5E), "t_comp": t_comp(s, V5E),
+                "alpha": alpha(s, V5E),
+                "t_coll": t_coll(s, mesh) if mesh is not None else 0.0,
+                "t_estm": estimate(s, V5E, mesh), "tune_s": dt,
+            }
+        base = picks["single"]
+        for regime, p in picks.items():
+            rows.append({
+                "name": f"{name}_{regime}",
+                "t_estm": p["t_estm"],
+                "expr": p["expr"],
+                "tiles": p["tiles"],
+                "t_coll": p["t_coll"],
+                "changed": (regime != "single"
+                            and (p["tiles"] != base["tiles"]
+                                 or p["expr"] != base["expr"])),
+            })
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        ts = r["tiles"]
+        print(f"mesh_tune_{r['name']},{r['t_estm']*1e6:.2f},"
+              f"expr={r['expr']} "
+              f"tiles=m{ts['m']}/n{ts['n']}/k{ts['k']}/h{ts['h']} "
+              f"t_coll_us={r['t_coll']*1e6:.2f} "
+              f"changed={'yes' if r['changed'] else 'no'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,8 @@ import traceback
 
 def main() -> None:
     from . import (bench_ablation, bench_attention, bench_end_to_end,
-                   bench_gemm_chain, bench_model_accuracy,
-                   bench_tuning_time, roofline)
+                   bench_gemm_chain, bench_mesh_tuning,
+                   bench_model_accuracy, bench_tuning_time, roofline)
 
     print("name,us_per_call,derived")
     for mod, label in [
@@ -16,6 +16,7 @@ def main() -> None:
         (bench_attention, "Table III / Fig 8cd"),
         (bench_end_to_end, "Fig 9"),
         (bench_tuning_time, "Table IV"),
+        (bench_mesh_tuning, "mesh-aware tuning (docs/tuning.md)"),
         (bench_model_accuracy, "Figs 10-11"),
         (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
         (roofline, "Roofline summary (dry-run artifacts)"),

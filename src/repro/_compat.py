@@ -89,6 +89,20 @@ def _install_pallas_compiler_params() -> None:
         pltpu.CompilerParams = pltpu.TPUCompilerParams
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    """Post-0.6-style ``jax.shard_map`` independent of the pin.
+
+    ``install()`` has always run by the time this is called (package
+    import side effect), so ``jax.shard_map`` exists on 0.4.x too; this
+    delegate just gives call sites a stable, importable name
+    (``_compat.shard_map``) instead of a monkey-patched attribute.
+    """
+    if check_vma is not None:
+        kw["check_vma"] = check_vma
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **kw)
+
+
 def current_mesh() -> Optional[jax.sharding.Mesh]:
     """The ambient physical mesh set by ``jax.set_mesh`` (None if unset).
 

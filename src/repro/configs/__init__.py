@@ -63,7 +63,7 @@ def get_config(name: str, smoke: bool = False) -> ModelConfig:
 
 
 def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
-    """DESIGN.md §4 skip rules."""
+    """docs/design.md §4 skip rules."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "full-attention arch cannot decode at 500k (skip)"
     return True, ""

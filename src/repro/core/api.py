@@ -19,7 +19,7 @@ import jax
 
 from . import codegen
 from .chain import Chain, attention_chain, gemm_chain
-from .perf_model import TpuSpec, V5E, estimate, roofline_bound
+from .perf_model import MeshSpec, TpuSpec, V5E, estimate, roofline_bound
 from .search import SearchReport, heuristic_search
 
 _CACHE: dict[tuple, "TunedKernel"] = {}
@@ -42,18 +42,25 @@ def _is_tpu() -> bool:
 
 def fuse_gemm_chain(M: int, N: int, K: int, H: int, batch: int = 1,
                     dtype: str = "float32", hw: TpuSpec = V5E,
+                    mesh: Optional[MeshSpec] = None,
                     interpret: Optional[bool] = None,
                     unit: int = 128, seed: int = 0) -> TunedKernel:
-    """Tune and build the fused 2-GEMM-chain kernel E = (A@B)@D."""
-    key = ("gemm", M, N, K, H, batch, dtype, hw.name, unit)
+    """Tune and build the fused 2-GEMM-chain kernel E = (A@B)@D.
+
+    (M, N, K, H, batch) are the GLOBAL problem dims; with a ``mesh`` the
+    search localizes them and the returned kernel is parametrized for
+    one shard's block (dispatch it under shard_map — ``kernels.ops``
+    does this wiring)."""
+    interp = (not _is_tpu()) if interpret is None else interpret
+    key = ("gemm", M, N, K, H, batch, dtype, hw.name, unit, mesh, interp,
+           seed)
     if key in _CACHE:
         return _CACHE[key]
     chain = gemm_chain(M, N, K, H, batch=batch, dtype=dtype)
     t0 = time.perf_counter()
-    report = heuristic_search(chain, hw=hw, unit=unit, seed=seed)
+    report = heuristic_search(chain, hw=hw, mesh=mesh, unit=unit, seed=seed)
     dt = time.perf_counter() - t0
     params = codegen.to_gemm_chain_params(report.best)
-    interp = (not _is_tpu()) if interpret is None else interpret
 
     from ..kernels.gemm_chain import fused_gemm_chain as kernel
 
@@ -67,20 +74,25 @@ def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
                    batch: int = 1, dtype: str = "float32",
                    causal: bool = False, window: int = 0,
                    scale: Optional[float] = None,
-                   hw: TpuSpec = V5E, interpret: Optional[bool] = None,
+                   hw: TpuSpec = V5E, mesh: Optional[MeshSpec] = None,
+                   interpret: Optional[bool] = None,
                    unit: int = 128, seed: int = 0) -> TunedKernel:
-    """Tune and build the fused attention kernel for (M, N, K, H)."""
+    """Tune and build the fused attention kernel for (M, N, K, H).
+
+    As with ``fuse_gemm_chain``, dims are global; a ``mesh`` tunes the
+    per-shard block (heads/batch fold into the chain batch, so head and
+    batch sharding enter through ``mesh.batch_axes``)."""
+    interp = (not _is_tpu()) if interpret is None else interpret
     key = ("attn", M, N, K, H, heads, batch, dtype, causal, window,
-           hw.name, unit)
+           scale, hw.name, unit, mesh, interp, seed)
     if key in _CACHE:
         return _CACHE[key]
     chain = attention_chain(M, N, K, H, heads=heads, batch=batch,
                             dtype=dtype, causal=causal, window=window)
     t0 = time.perf_counter()
-    report = heuristic_search(chain, hw=hw, unit=unit, seed=seed)
+    report = heuristic_search(chain, hw=hw, mesh=mesh, unit=unit, seed=seed)
     dt = time.perf_counter() - t0
     params = codegen.to_attention_params(report.best)
-    interp = (not _is_tpu()) if interpret is None else interpret
 
     from ..kernels.attention import fused_attention as kernel
 

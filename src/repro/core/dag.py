@@ -15,7 +15,7 @@ Both collapse into one uniform rule: *pop enclosing loops from the
 inside out while the innermost one either does not index the tensor or
 has extent 1*.
 
-TPU grid binding (Rule-1 canonicalization, DESIGN.md §2): chain-spatial
+TPU grid binding (Rule-1 canonicalization, docs/design.md §2): chain-spatial
 loops sitting on pure-nest positions are hoisted to the Pallas grid.
 Spatial loops inside *flat* (sequential-sibling) scopes stay put — that
 is exactly the deep-vs-flat distinction (a flat `mn(k,h)` computes C

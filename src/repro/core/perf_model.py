@@ -1,6 +1,6 @@
 """Analytical performance model (§IV-A, eqs (2)–(5)) on TPU constants.
 
-    t_estm = (t_mem + t_comp) * alpha                      (2)
+    t_estm = (t_mem + t_comp) * alpha + t_coll             (2')
     t_mem  = Σ_loads/stores  bytes_per_visit * trips / W   (3)
     t_comp = Σ_computes      flops_per_visit * trips / P   (4)
     alpha  = (N_grid + N_stages) / N_grid                  (5')
@@ -9,7 +9,15 @@ Eq (5') is the TPU re-interpretation of the paper's SM-occupancy
 slowdown: a Pallas kernel's grid is executed by one TensorCore as a
 software pipeline (HBM→VMEM DMA overlapped with MXU); with few grid
 steps the pipeline fill/drain is not amortized.  Same monotone shape as
-the paper's (N_block + N_SM)/N_block, different mechanism (DESIGN.md §2).
+the paper's (N_block + N_SM)/N_block, different mechanism
+(docs/design.md §2).
+
+The ``t_coll`` term in (2') is this repo's mesh extension
+(docs/design.md §7, docs/tuning.md): under a ``MeshSpec`` the model
+prices the *local shard's* tile trips (eqs (3)/(4) on the localized
+chain) plus the ring-collective time needed to combine partial results
+across sharded reduction loops.  With no mesh — or a 1×1 mesh —
+``t_coll`` is 0 and (2') degenerates to the paper's eq (2) exactly.
 
 VMEM estimation mirrors the paper's eq. (1) shared-memory estimate with
 a 2x double-buffer factor on pipelined input tiles (Mosaic allocates
@@ -17,11 +25,13 @@ two copies of every streamed block).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
-from .chain import DTYPE_BYTES
+from .chain import Chain, DTYPE_BYTES
 from .dag import Schedule
+from .ring import ring_traffic_bytes
 
 
 @dataclass(frozen=True)
@@ -44,6 +54,128 @@ V5E = TpuSpec()
 
 # fp32 path (interpret-mode / CPU correlation experiments use fp32)
 V5E_F32 = TpuSpec(name="tpu_v5e_f32", peak_flops=197e12 / 4)
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Parallelism regime the tuner prices (docs/design.md §7).
+
+    axes:       ((mesh axis name, size), ...) — the physical mesh shape.
+    placement:  ((chain loop, mesh axis), ...) — which cross-tile loop
+                each sharded mesh axis splits.  A loop absent from the
+                placement is fully local; an axis may appear at most
+                once (1-D sharding per loop, matching ``dist.sharding``).
+    batch_axes: mesh axes the chain's leading batch dim shards over
+                (data parallelism — free of collectives for a fused
+                kernel, but it shrinks the local grid, which moves alpha
+                and therefore the best tile).
+    ici_bw:     bytes/s per inter-chip link (ring model, v5e default).
+    """
+
+    axes: tuple[tuple[str, int], ...] = ()
+    placement: tuple[tuple[str, str], ...] = ()
+    batch_axes: tuple[str, ...] = ()
+    ici_bw: float = V5E.ici_bw
+
+    @classmethod
+    def single(cls) -> "MeshSpec":
+        """The single-chip regime: estimate() must reproduce eq (2)."""
+        return cls()
+
+    @classmethod
+    def from_mesh(cls, mesh, placement: tuple[tuple[str, str], ...] = (),
+                  batch_axes: tuple[str, ...] = (),
+                  ici_bw: float = V5E.ici_bw) -> "MeshSpec":
+        """Build from anything with a ``.shape`` mapping (a jax Mesh)."""
+        return cls(axes=tuple((str(a), int(s))
+                              for a, s in dict(mesh.shape).items()),
+                   placement=tuple(placement),
+                   batch_axes=tuple(batch_axes), ici_bw=ici_bw)
+
+    # ------------------------------------------------------------------
+    def axis_size(self, name: str) -> int:
+        for a, s in self.axes:
+            if a == name:
+                return s
+        raise KeyError(f"mesh axis {name!r} not in {self.axes}")
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(s for _, s in self.axes) if self.axes else 1
+
+    def loop_factor(self, loop: str) -> int:
+        """How many ways a chain loop is split across the mesh."""
+        return math.prod(self.axis_size(a) for l, a in self.placement
+                         if l == loop)
+
+    def batch_factor(self) -> int:
+        return math.prod(self.axis_size(a) for a in self.batch_axes)
+
+    @property
+    def is_single(self) -> bool:
+        return (self.batch_factor() == 1
+                and all(self.axis_size(a) == 1 for _, a in self.placement))
+
+    def localize(self, chain: Chain) -> Chain:
+        """The per-shard sub-problem: every placed loop's extent divided
+        by its mesh factor (ceil — ragged shards are padded), batch by
+        the batch_axes product.  Identity for a 1×1 mesh."""
+        if self.is_single:
+            return chain
+        loops = {l: max(1, math.ceil(e / self.loop_factor(l)))
+                 for l, e in chain.loops.items()}
+        batch = max(1, math.ceil(chain.batch / self.batch_factor()))
+        return dataclasses.replace(chain, loops=loops, batch=batch)
+
+
+def _reduced_outputs(chain: Chain, loop: str) -> tuple[str, ...]:
+    """Chain outputs whose value transitively accumulates a reduction
+    over ``loop`` — sharding that loop leaves per-shard partial sums,
+    so these outputs must be combined across the axis."""
+    partial: set[str] = set()
+    for op in chain.ops:
+        if loop in op.reduce_dims or any(t in partial for t in op.ins):
+            partial.add(op.out)
+    return tuple(n for n in chain.output_names if n in partial)
+
+
+def collective_bytes(chain: Chain, mesh: MeshSpec) -> float:
+    """Per-device ring traffic to combine one fused-kernel invocation's
+    partial results (docs/tuning.md).  ``chain`` must be the *local*
+    chain (what each shard computes), so output bytes are shard-sized.
+
+    Sharding a spatial loop is collective-free (outputs stay sharded);
+    sharding a reduction loop all-reduces every downstream output over
+    that axis.  An online-softmax producer upstream (attention's n loop)
+    additionally moves the running (max, sum) statistics — one f32 pair
+    per output row — to rescale the partials (FlashDecoding-style
+    combine; same wire pattern as ``models.layers.
+    distributed_decode_attention``)."""
+    total = 0.0
+    for loop, axis in mesh.placement:
+        n = mesh.axis_size(axis)
+        if n <= 1:
+            continue
+        outs = _reduced_outputs(chain, loop)
+        softmax_upstream = any(op.epilogue == "online_softmax"
+                               and (loop in op.reduce_dims
+                                    or loop in chain.tensors[op.out].dims)
+                               for op in chain.ops)
+        for name in outs:
+            t = chain.tensors[name]
+            nbytes = (math.prod(chain.loops[d] for d in t.dims)
+                      * t.dtype_bytes * chain.batch)
+            total += ring_traffic_bytes("all-reduce", nbytes, n)
+            if softmax_upstream:
+                rows = chain.batch * math.prod(
+                    chain.loops[d] for d in t.dims[:-1])
+                total += ring_traffic_bytes("all-reduce", 2 * 4 * rows, n)
+    return total
+
+
+def t_coll(sched: Schedule, mesh: MeshSpec) -> float:
+    """Collective seconds for the local schedule under ``mesh``."""
+    return collective_bytes(sched.chain, mesh) / mesh.ici_bw
 
 
 def t_mem(sched: Schedule, hw: TpuSpec = V5E) -> float:
@@ -83,9 +215,20 @@ def alpha(sched: Schedule, hw: TpuSpec = V5E) -> float:
     return (n_grid + hw.pipeline_stages) / n_grid
 
 
-def estimate(sched: Schedule, hw: TpuSpec = V5E) -> float:
-    """Eq (2): estimated seconds for the fused kernel."""
-    return (t_mem(sched, hw) + t_comp(sched, hw)) * alpha(sched, hw)
+def estimate(sched: Schedule, hw: TpuSpec = V5E,
+             mesh: "MeshSpec | None" = None) -> float:
+    """Eq (2'): estimated seconds for the fused kernel.
+
+    With a mesh, ``sched`` is expected to already be a schedule over the
+    localized chain (``heuristic_search`` localizes before candidate
+    generation); the tile terms price the local block and the collective
+    term prices the cross-shard combine.  mesh=None (or a 1×1 mesh)
+    reproduces the paper's single-chip eq (2) exactly.
+    """
+    t = (t_mem(sched, hw) + t_comp(sched, hw)) * alpha(sched, hw)
+    if mesh is not None and not mesh.is_single:
+        t += t_coll(sched, mesh)
+    return t
 
 
 def vmem_estimate(sched: Schedule, hw: TpuSpec = V5E) -> int:

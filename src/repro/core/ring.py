@@ -1,0 +1,45 @@
+"""Ring-algorithm collective traffic formulas (docs/design.md §7).
+
+Per-device link traffic of one collective over ``n`` participants,
+expressed in terms of the *result* buffer size (matching how the HLO
+parser in ``launch.hlo_analysis`` reads shapes off the optimized HLO):
+
+    all-reduce          2 * B * (n-1) / n      (reduce-scatter + all-gather)
+    all-gather          B * (n-1) / n          (B = gathered result)
+    reduce-scatter      B * (n-1)              (B = the shard result)
+    all-to-all          B * (n-1) / n
+    collective-permute  B
+
+Pure arithmetic with no dependencies in either direction, so both the
+tuner (``core.perf_model`` — pricing collectives *before* compiling
+anything) and the dry-run analyzer (``launch.hlo_analysis`` — pricing
+collectives parsed *from* the compiled HLO) share one model; a mismatch
+between the two would silently skew tile selection.
+"""
+from __future__ import annotations
+
+RING_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def ring_traffic_bytes(kind: str, result_bytes: float, n: int) -> float:
+    """Per-device link traffic of one ring collective.
+
+    result_bytes: size of the op's *result* buffer (see module doc for
+    which buffer that is per kind).  n: participant count; n <= 1 means
+    the collective degenerates to a local no-op.
+    """
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if kind == "all-gather":
+        return result_bytes * (n - 1) / n
+    if kind == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if kind == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return result_bytes
+    raise ValueError(f"unknown collective kind {kind!r}; "
+                     f"expected one of {RING_KINDS}")

@@ -21,7 +21,8 @@ from typing import Callable, Optional, Sequence
 
 from .chain import Chain
 from .dag import Schedule, build_schedule
-from .perf_model import TpuSpec, V5E, estimate, vmem_estimate
+from .perf_model import (MeshSpec, TpuSpec, V5E, collective_bytes, estimate,
+                         vmem_estimate)
 from .pruning import PruneStats, generate_candidates, rule3_padding_ok
 from .tiling import candidate_tile_sizes
 
@@ -38,6 +39,7 @@ class SearchReport:
     n_candidates: int
     prune_stats: dict
     history: list[tuple[int, float]] = field(default_factory=list)
+    mesh: Optional[MeshSpec] = None   # regime the schedule was tuned for
 
 
 def _mutate(sched: Schedule, chain: Chain, rng: random.Random,
@@ -68,13 +70,29 @@ def _mutate(sched: Schedule, chain: Chain, rng: random.Random,
 def heuristic_search(chain: Chain,
                      measure_fn: Optional[MeasureFn] = None,
                      hw: TpuSpec = V5E,
+                     mesh: Optional[MeshSpec] = None,
                      population_size: int = 128,   # N
                      topk: int = 8,                # n (paper: 8)
                      epsilon: float = 0.01,        # convergence criterion
                      max_iterations: int = 32,     # safety net only
                      unit: int = 128,
                      seed: int = 0) -> SearchReport:
-    """Algorithm 1.  Returns the best schedule + tuning telemetry."""
+    """Algorithm 1.  Returns the best schedule + tuning telemetry.
+
+    With a ``mesh``, the search runs over the *localized* chain — each
+    shard's sub-problem — so the picked tile sizes are per parallelism
+    regime and directly parametrize the per-shard kernel that
+    ``kernels.ops`` dispatches through shard_map.  The collective term
+    of eq (2') depends only on (chain, mesh), not the tile sizes, so it
+    stays OUT of the intra-regime search dynamics (ranking, parent
+    weights, the epsilon convergence band — a large constant would
+    drown the signal in all three) and is added once to the reported
+    best_time/history, keeping regime-vs-regime comparisons on eq (2').
+    """
+    coll_s = 0.0
+    if mesh is not None:
+        chain = mesh.localize(chain)
+        coll_s = collective_bytes(chain, mesh) / mesh.ici_bw
     rng = random.Random(seed)
     stats = PruneStats()
     candidates = generate_candidates(chain, hw=hw, unit=unit, stats=stats)
@@ -134,6 +152,9 @@ def heuristic_search(chain: Chain,
         population = nxt
 
     assert best is not None
-    return SearchReport(best=best, best_time=best_t, n_measured=n_measured,
+    return SearchReport(best=best, best_time=best_t + coll_s,
+                        n_measured=n_measured,
                         n_iterations=it + 1, n_candidates=stats.n_kept,
-                        prune_stats=stats.as_dict(), history=history)
+                        prune_stats=stats.as_dict(),
+                        history=[(i, t + coll_s) for i, t in history],
+                        mesh=mesh)

@@ -4,4 +4,5 @@
 ("data" / "model" / "tp" / "seq" / "batch") are mapped onto physical
 mesh axes; model and launch code never name mesh axes directly.
 """
-from .sharding import Rules, constrain  # noqa: F401
+from .sharding import (Rules, batch_placement, constrain,  # noqa: F401
+                       default_rules, feature_placement)

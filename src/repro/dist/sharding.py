@@ -150,6 +150,84 @@ def _dim_axes(rules: Rules, mesh: jax.sharding.Mesh,
     return axes if len(axes) > 1 else axes[0]
 
 
+def default_rules(mesh: jax.sharding.Mesh) -> Rules:
+    """Canonical placements when a caller has a mesh but no Rules:
+    every pod/data axis carries batch, a model axis carries features."""
+    names = tuple(mesh.shape)
+    data = tuple(a for a in names if a in ("pod", "data"))
+    model = "model" if "model" in names else None
+    return Rules(data=data, model=model, tp=model)
+
+
+def batch_placement(rules: Rules, mesh: jax.sharding.Mesh,
+                    batch: int) -> tuple[str, ...]:
+    """Data axes a batch dim of size ``batch`` shards over (dropping
+    non-dividing axes, via ``Rules.batch_spec``).  Shared by the
+    kernel dispatcher (``kernels.ops``) and the tuner bridge
+    (``launch.mesh.tuner_mesh_spec``) so the tuner prices exactly what
+    is dispatched."""
+    spec = rules.batch_spec(batch, mesh)
+    if not len(spec) or spec[0] is None:
+        return ()
+    ax = spec[0]
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+def feature_placement(rules: Rules, mesh: jax.sharding.Mesh,
+                      dim: int,
+                      taken: tuple[str, ...] = ()) -> Optional[str]:
+    """The tp-or-model axis, if it evenly divides ``dim``.
+
+    ``taken`` excludes axes already consumed by the batch placement —
+    the ZeRO-3 regime routes the model axis through ``batch_axes``
+    (batch rides every axis), and a mesh axis may appear only once in
+    a PartitionSpec."""
+    ax = rules.tp or rules.model
+    if ax and ax not in taken and ax in mesh.shape \
+            and mesh.shape[ax] > 1 and dim % mesh.shape[ax] == 0:
+        return ax
+    return None
+
+
+def dispatch_mesh_spec(rules: Rules, mesh: jax.sharding.Mesh, *,
+                       kind: str, batch: int,
+                       feature_dims: tuple[int, ...],
+                       ici_bw: Optional[float] = None):
+    """(MeshSpec, batch_axes, feature_axis) for dispatching one fused
+    kernel under this mesh + regime — THE single builder both the
+    kernel dispatcher (``kernels.ops``) and the tuner bridge
+    (``launch.mesh.tuner_mesh_spec``) call, so the tuner can never
+    price a regime the dispatcher would not run.
+
+    kind "gemm": the feature axis splits the ``h`` loop (output
+    features) as a MeshSpec placement entry; ``feature_dims=(H,)``.
+    kind "attention": heads fold into the *chain batch*
+    (``attention_chain`` batch = model batch x heads), so the feature
+    axis joins ``batch_axes`` and no loop is placed;
+    ``feature_dims=(kv_heads, q_heads)`` — the axis must divide every
+    entry, which also preserves the GQA group per shard.
+    """
+    from ..core.perf_model import MeshSpec, V5E
+    if kind not in ("gemm", "attention"):
+        raise ValueError(f"unknown chain kind {kind!r}")
+    baxes = batch_placement(rules, mesh, batch)
+    feat = (feature_placement(rules, mesh, feature_dims[0], taken=baxes)
+            if feature_dims else None)
+    if feat is not None and any(d % mesh.shape[feat]
+                                for d in feature_dims[1:]):
+        feat = None
+    ici_bw = V5E.ici_bw if ici_bw is None else ici_bw
+    if kind == "attention":
+        spec = MeshSpec.from_mesh(
+            mesh, batch_axes=baxes + ((feat,) if feat else ()),
+            ici_bw=ici_bw)
+    else:
+        spec = MeshSpec.from_mesh(
+            mesh, placement=((("h", feat),) if feat else ()),
+            batch_axes=baxes, ici_bw=ici_bw)
+    return spec, baxes, feat
+
+
 def constrain(x: jax.Array, rules: Rules,
               *logical: Optional[str]) -> jax.Array:
     """Apply ``jax.lax.with_sharding_constraint`` mapping each of ``x``'s

@@ -5,6 +5,15 @@ either the interpret-mode kernel (exact same body, Python-evaluated —
 used by tests) or the XLA reference path (used by models during CPU
 dry-runs, where Pallas cannot lower).  Padding for non-dividing tiles
 happens here (Rule 3 keeps the overhead < 5%).
+
+Sharded dispatch (docs/design.md §7): passing ``mesh=`` (plus optional
+``dist.sharding.Rules``) wraps the kernel in ``_compat.shard_map`` so
+each shard runs the fused schedule on its local block — batch rides the
+rules' data axes, the output-feature/head dim rides tp-or-model.  The
+tuner is handed the matching ``MeshSpec``, so the tile sizes it picks
+are for the per-shard sub-problem, not the global one.  Placements are
+chosen collective-free (spatial dims only); dims the mesh cannot divide
+evenly stay replicated rather than failing.
 """
 from __future__ import annotations
 
@@ -12,9 +21,12 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from .. import _compat
 from ..core import api
+from ..core.perf_model import MeshSpec
+from ..dist.sharding import Rules, default_rules, dispatch_mesh_spec
 from . import ref
 from .attention import fused_attention as _attn_kernel
 from .gemm_chain import fused_gemm_chain as _gemm_kernel
@@ -28,17 +40,41 @@ def _backend_mode(mode: str) -> str:
 
 def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
                mode: str = "auto", tuned: bool = True,
-               interpret: Optional[bool] = None) -> jax.Array:
+               interpret: Optional[bool] = None,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               rules: Optional[Rules] = None) -> jax.Array:
     """Fused E = (A@B)@D with MCFuser-tuned schedule.
 
     mode: "auto" | "kernel" | "interpret" | "ref".
+    mesh: dispatch through shard_map — batch over the rules' data axes,
+    H (d's last dim) over tp-or-model; the schedule is tuned for the
+    local block.  rules defaults to the canonical data/model placement.
     """
     m = _backend_mode(mode)
-    if m == "ref":
-        return ref.gemm_chain_ref(a, b, d)
+    if m == "ref" and (mesh is None or a.ndim != 3):
+        return ref.gemm_chain_ref(a, b, d)  # supports (..., M, K) batching
     bsz, M, K = a.shape
     N, H = b.shape[-1], d.shape[-1]
     interp = (m == "interpret") if interpret is None else interpret
+
+    if mesh is not None:
+        rules = rules if rules is not None else default_rules(mesh)
+        spec, baxes, hax = dispatch_mesh_spec(
+            rules, mesh, kind="gemm", batch=bsz, feature_dims=(H,))
+        if baxes or hax:
+            body = _gemm_body(M, N, K, H, bsz, str(a.dtype), m, tuned,
+                              interp, spec)
+            bspec = baxes if baxes else None
+            return _compat.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(bspec, None, None), P(bspec, None, None),
+                          P(bspec, None, hax)),
+                out_specs=P(bspec, None, hax),
+                check_vma=False)(a, b, d)
+        # nothing shardable on this mesh: fall through to single-device
+
+    if m == "ref":
+        return ref.gemm_chain_ref(a, b, d)
     if tuned:
         tk = api.fuse_gemm_chain(M, N, K, H, batch=bsz,
                                  dtype=str(a.dtype), interpret=interp)
@@ -46,22 +82,58 @@ def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
     return _gemm_kernel(a, b, d, interpret=interp)
 
 
+def _gemm_body(M, N, K, H, batch, dtype, m, tuned, interp,
+               spec: MeshSpec):
+    """Per-shard program: the tuned fused kernel on the local block.
+    Tuning runs at trace time against the GLOBAL dims + MeshSpec, so
+    the cached schedule is the localized one."""
+    if m == "ref":
+        return ref.gemm_chain_ref
+    if tuned:
+        tk = api.fuse_gemm_chain(M, N, K, H, batch=batch, dtype=dtype,
+                                 mesh=spec, interpret=interp)
+        return lambda al, bl, dl: tk(al, bl, dl)
+    return functools.partial(_gemm_kernel, interpret=interp)
+
+
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,
               causal: bool = False, window: int = 0,
               scale: Optional[float] = None,
               mode: str = "auto", tuned: bool = True,
-              interpret: Optional[bool] = None) -> jax.Array:
+              interpret: Optional[bool] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              rules: Optional[Rules] = None) -> jax.Array:
     """Fused GQA attention, MCFuser-tuned block schedule.
 
     q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv).
+    mesh: dispatch through shard_map — batch over the rules' data axes,
+    heads over tp-or-model (kv heads must divide too, which preserves
+    the GQA group per shard); the block schedule is tuned for the local
+    (batch x heads) slice.
     """
     m = _backend_mode(mode)
+    b, hq, M, D = q.shape
+    hkv = k.shape[1]
+    N, Dv = v.shape[-2], v.shape[-1]
+    interp = (m == "interpret") if interpret is None else interpret
+
+    if mesh is not None:
+        rules = rules if rules is not None else default_rules(mesh)
+        spec, baxes, hax = dispatch_mesh_spec(
+            rules, mesh, kind="attention", batch=b,
+            feature_dims=(hkv, hq))
+        if baxes or hax:
+            body = _attn_body(M, N, D, Dv, hq, b, str(q.dtype), causal,
+                              window, scale, m, tuned, interp, spec)
+            bspec = baxes if baxes else None
+            qs = P(bspec, hax, None, None)
+            return _compat.shard_map(
+                body, mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs,
+                check_vma=False)(q, k, v)
+
     if m == "ref":
         return ref.gqa_attention_ref(q, k, v, causal=causal,
                                      window=window, scale=scale)
-    b, hq, M, D = q.shape
-    N, Dv = v.shape[-2], v.shape[-1]
-    interp = (m == "interpret") if interpret is None else interpret
     if tuned:
         tk = api.fuse_attention(M, N, D, Dv, heads=hq, batch=b,
                                 dtype=str(q.dtype), causal=causal,
@@ -70,3 +142,18 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         return tk(q, k, v)
     return _attn_kernel(q, k, v, causal=causal, window=window,
                         scale=scale, interpret=interp)
+
+
+def _attn_body(M, N, D, Dv, heads, batch, dtype, causal, window, scale,
+               m, tuned, interp, spec: MeshSpec):
+    if m == "ref":
+        return functools.partial(ref.gqa_attention_ref, causal=causal,
+                                 window=window, scale=scale)
+    if tuned:
+        tk = api.fuse_attention(M, N, D, Dv, heads=heads, batch=batch,
+                                dtype=dtype, causal=causal,
+                                window=window, scale=scale, mesh=spec,
+                                interpret=interp)
+        return lambda ql, kl, vl: tk(ql, kl, vl)
+    return functools.partial(_attn_kernel, causal=causal, window=window,
+                             scale=scale, interpret=interp)

@@ -47,7 +47,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     dp = ("pod", "data") if multi_pod else ("data",)
-    # Parallelism regime per cell kind (DESIGN.md §5):
+    # Parallelism regime per cell kind (docs/design.md §5):
     #  * dense/ssm/hybrid train: ZeRO-3 — batch over every axis, params
     #    2-D sharded and gathered per layer; no activation TP collectives.
     #    (multi-pod keeps the pod axis on batch and adds SP since batch

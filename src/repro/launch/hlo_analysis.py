@@ -1,4 +1,4 @@
-"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §6).
+"""Roofline-term extraction from compiled XLA artifacts (docs/design.md §6).
 
 compute    = HLO_FLOPs_per_device / peak_FLOPs
 memory     = HLO_bytes_per_device / HBM_bw
@@ -6,8 +6,10 @@ collective = estimated per-device link traffic / ICI_bw
 
 cost_analysis() reports per-device flops / bytes on the forced-host
 backend (verified in a pilot run).  collective traffic is parsed from
-the optimized HLO: per op we apply ring-algorithm traffic formulas to
-the result shape and participant count.
+the optimized HLO: per op we apply the ring-algorithm traffic formulas
+(core.ring — the same model core.perf_model prices collectives with
+BEFORE compiling, so tuner and dry-run never disagree) to the result
+shape and participant count.
 """
 from __future__ import annotations
 
@@ -16,8 +18,10 @@ import math
 import re
 from dataclasses import dataclass, field
 
+from ..core.ring import ring_traffic_bytes
+
 # v5e constants (also in core.perf_model.TpuSpec — duplicated here so the
-# launch layer has no dependency on the tuner)
+# launch layer depends only on core.ring's pure arithmetic, not the tuner)
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
@@ -80,17 +84,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
             gi = _GROUPS_IOTA_RE.search(line)
             n = int(gi.group(2)) if gi else 2
         n = max(n, 2)
-        # ring traffic per device
-        if kind == "all-reduce":
-            traffic = 2.0 * rb * (n - 1) / n
-        elif kind == "all-gather":
-            traffic = rb * (n - 1) / n
-        elif kind == "reduce-scatter":
-            traffic = rb * (n - 1)          # result is the shard
-        elif kind == "all-to-all":
-            traffic = rb * (n - 1) / n
-        else:  # collective-permute
-            traffic = rb
+        traffic = ring_traffic_bytes(kind, rb, n)
         stats.counts[kind] = stats.counts.get(kind, 0) + 1
         stats.result_bytes[kind] = stats.result_bytes.get(kind, 0) + rb
         stats.traffic_bytes += traffic

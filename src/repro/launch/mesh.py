@@ -2,10 +2,21 @@
 
 A function, not a module-level constant: importing this module never
 touches jax device state.
+
+Also the launch-layer bridge to the mesh-aware tuner
+(docs/design.md §7): ``tuner_mesh_spec`` converts a physical jax Mesh +
+``dist.sharding.Rules`` regime into the ``core.perf_model.MeshSpec``
+the heuristic search prices schedules against.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+
+from ..core.perf_model import MeshSpec, V5E
+from ..dist.sharding import (Rules, batch_placement, default_rules,
+                             dispatch_mesh_spec, feature_placement)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -24,3 +35,80 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     return jax.make_mesh(
         (n // model_axis, model_axis), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def tuner_mesh_spec(mesh: jax.sharding.Mesh,
+                    rules: Optional[Rules] = None,
+                    *, kind: str = "gemm",
+                    batch: Optional[int] = None,
+                    feature_dim: Optional[int] = None,
+                    reduction_dim: Optional[int] = None,
+                    shard_reduction: bool = False,
+                    ici_bw: float = V5E.ici_bw) -> MeshSpec:
+    """The MeshSpec for tuning fused kernels under this mesh + regime.
+
+    Placement mirrors what ``kernels.ops`` dispatches — the same shared
+    helpers derive it, so the tuner never prices a regime the
+    dispatcher would not run.  Both dispatch shapes are collective-free
+    but fold the tp-or-model axis in differently:
+
+    * ``kind="gemm"`` — the batch rides the data axes; the ``h`` loop
+      (output features, d's last dim) rides tp-or-model as a
+      ``placement`` entry.  ``feature_dim`` is H.
+    * ``kind="attention"`` — heads fold into the *chain batch*
+      (``attention_chain`` batch = model batch x heads), so the
+      tp-or-model axis joins ``batch_axes`` and no loop is placed.
+      ``feature_dim`` is the kv-head count (the dim whose divisibility
+      gates head sharding in ``ops.attention``).
+
+    Pass the concrete ``batch`` / ``feature_dim`` to apply the
+    dispatcher's divisibility degradation (axes a dim cannot absorb
+    evenly drop to replication); omitted dims are assumed divisible.
+
+    ``shard_reduction=True`` instead places the ``n`` loop (the chain's
+    cross-op reduction: kv sequence for attention) on tp-or-model,
+    gated by ``reduction_dim``'s divisibility — the ring-attention
+    regime whose all-reduce cost the model's collective term prices.
+    ``kernels.ops`` has no dispatch for it yet (see ROADMAP).
+    """
+    if kind not in ("gemm", "attention"):
+        raise ValueError(f"unknown chain kind {kind!r}")
+    rules = rules if rules is not None else default_rules(mesh)
+    if not shard_reduction and batch is not None \
+            and feature_dim is not None:
+        # concrete dims: delegate to the exact builder the dispatcher
+        # uses, so parity is structural rather than mirrored by hand
+        spec, _, _ = dispatch_mesh_spec(rules, mesh, kind=kind,
+                                        batch=batch,
+                                        feature_dims=(feature_dim,),
+                                        ici_bw=ici_bw)
+        return spec
+    if batch is not None:
+        baxes = batch_placement(rules, mesh, batch)
+    else:
+        baxes = tuple(a for a in (rules.batch_axes or rules.data)
+                      if a in mesh.shape and mesh.shape[a] > 1)
+
+    def _tp_axis(dim: Optional[int]) -> Optional[str]:
+        if dim is not None:
+            return feature_placement(rules, mesh, dim, taken=baxes)
+        ax = rules.tp or rules.model
+        if ax and ax not in baxes and ax in mesh.shape \
+                and mesh.shape[ax] > 1:
+            return ax
+        return None
+
+    placement: tuple[tuple[str, str], ...] = ()
+    if shard_reduction:
+        red = _tp_axis(reduction_dim)
+        if red:
+            placement = (("n", red),)
+    else:
+        feat = _tp_axis(feature_dim)
+        if feat:
+            if kind == "attention":
+                baxes = baxes + (feat,)
+            else:
+                placement = (("h", feat),)
+    return MeshSpec.from_mesh(mesh, placement=placement,
+                              batch_axes=baxes, ici_bw=ici_bw)

@@ -10,7 +10,7 @@ path streams KV blocks with online softmax using MCFuser-tuned block
 sizes (the fused-kernel schedule), so the intermediate score matrix
 never exists in HBM — on TPU this is the Pallas kernel itself; in the
 dry-run it is the structurally equivalent lax.scan program, so the
-roofline reflects the fused design (DESIGN.md §3).
+roofline reflects the fused design (docs/design.md §3).
 """
 from __future__ import annotations
 
@@ -233,10 +233,16 @@ def attention_block(p: dict, x: jax.Array, cfg: ModelConfig, rules: Rules,
                     window: Optional[int] = None, causal: bool = True,
                     bkv: int = 512, unroll: bool = False,
                     mesh: Optional[jax.sharding.Mesh] = None,
-                    dist_decode: bool = False
+                    dist_decode: bool = False,
+                    kernel_ops: bool = False
                     ) -> tuple[jax.Array, Optional[dict]]:
     """x: (B, S, D).  positions: (S,) absolute positions of x's tokens.
-    window None -> cfg.window.  Returns (out, updated cache)."""
+    window None -> cfg.window.  Returns (out, updated cache).
+
+    kernel_ops: route cache-free attention through ``kernels.ops`` —
+    the MCFuser-tuned kernel dispatched per shard via shard_map when a
+    mesh is ambient (docs/design.md §7), instead of the XLA
+    streaming-attention twin."""
     b, s, d = x.shape
     dh = cfg.dh
     win = cfg.window if window is None else window
@@ -315,6 +321,13 @@ def attention_block(p: dict, x: jax.Array, cfg: ModelConfig, rules: Rules,
             # decode / short: single-block scores are already tiny
             o = _positional_attention(q, kk, vv, positions, kv_pos,
                                       causal, win, scale)
+    elif kernel_ops and s > 1:
+        # sharded fused-kernel dispatch: GQA handled inside the kernel,
+        # no head repeat; batch/heads shard per the ambient mesh + rules
+        from ..kernels import ops as kernel_ops_mod
+        o = kernel_ops_mod.attention(
+            q, k, v, causal=causal, window=win, scale=scale,
+            mesh=mesh if rules.enabled else None, rules=rules)
     else:
         kk = jnp.repeat(k, group, axis=1)
         vv = jnp.repeat(v, group, axis=1)

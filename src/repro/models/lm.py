@@ -47,6 +47,10 @@ class Runtime:
     unroll: bool = False    # unroll all scans (dry-run cost accounting:
     # XLA HloCostAnalysis counts while bodies ONCE; trip-count-1 loops
     # restore correct flops/bytes in cost_analysis())
+    kernel_ops: bool = False  # route cache-free attention through
+    # kernels.ops: the MCFuser-tuned kernel, shard_map-dispatched per
+    # shard when a mesh is set (docs/design.md §7); off by default —
+    # the streaming XLA twin remains the portable path.
 
 
 def _layer_types(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
@@ -223,7 +227,8 @@ class LM:
                 p["mix"], h, cfg, rt.rules, positions=positions,
                 cache=cache, window=win, causal=True, bkv=rt.bkv,
                 unroll=rt.unroll, mesh=rt.mesh,
-                dist_decode=rt.dist_decode_attn)
+                dist_decode=rt.dist_decode_attn,
+                kernel_ops=rt.kernel_ops)
         elif kind == "mamba":
             mix, new_cache = L.mamba_block(p["mix"], h, cfg, rt.rules,
                                            state=cache, unroll=rt.unroll)

@@ -3,7 +3,7 @@ clipping, pure JAX (no optax in this environment).
 
 Optimizer state mirrors the parameter pytree leaf-for-leaf, so ZeRO-1
 sharding falls out of giving state leaves the same PartitionSpec as
-their parameter (DESIGN.md §5).
+their parameter (docs/design.md §5).
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """Fault-tolerant step runner + straggler mitigation + elastic re-mesh.
 
-Production posture (1000+ nodes, DESIGN.md §5):
+Production posture (1000+ nodes, docs/design.md §5):
 
 * `StepRunner` — drives training with periodic atomic checkpoints; on a
   step failure it restores the last committed checkpoint and replays

@@ -81,6 +81,95 @@ def test_sharded_execution_matches_reference(tmp_path):
     assert out["decode_maxerr"] < 1e-2, out
 
 
+SHARDED_OPS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core import api
+from repro.core.perf_model import MeshSpec
+from repro.dist.sharding import Rules
+from repro.kernels import ops
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = Rules(data=("data",), model="model", tp="model")
+kx = jax.random.split(jax.random.PRNGKey(0), 6)
+out = {}
+
+# --- sharded fused gemm chain vs single-device fused kernel -------------
+B, M, K, N, H = 4, 256, 128, 256, 512
+a = jax.random.normal(kx[0], (B, M, K), jnp.float32)
+b = jax.random.normal(kx[1], (B, K, N), jnp.float32)
+d = jax.random.normal(kx[2], (B, N, H), jnp.float32) * 0.1
+with jax.set_mesh(mesh):
+    e_sh = ops.gemm_chain(a, b, d, mode="interpret", mesh=mesh,
+                          rules=rules)
+e_one = ops.gemm_chain(a, b, d, mode="interpret")
+out["gemm_maxerr"] = float(jnp.max(jnp.abs(e_sh - e_one)))
+# the dispatched schedule was tuned for the LOCAL block (H/4): refetch
+# the cached TunedKernel under the same MeshSpec ops.py built
+spec = MeshSpec.from_mesh(mesh, placement=(("h", "model"),),
+                          batch_axes=("data",))
+tk_mesh = api.fuse_gemm_chain(M, N, K, H, batch=B, dtype="float32",
+                              mesh=spec, interpret=True)
+out["mesh_bh"] = tk_mesh.params.bh
+out["local_h"] = H // mesh.shape["model"]
+
+# --- sharded fused GQA attention vs single-device fused kernel ----------
+Bq, Hq, Hkv, S, Dh = 2, 8, 4, 256, 64
+q = jax.random.normal(kx[3], (Bq, Hq, S, Dh), jnp.float32)
+k = jax.random.normal(kx[4], (Bq, Hkv, S, Dh), jnp.float32)
+v = jax.random.normal(kx[5], (Bq, Hkv, S, Dh), jnp.float32)
+with jax.set_mesh(mesh):
+    o_sh = ops.attention(q, k, v, causal=True, mode="interpret",
+                         mesh=mesh, rules=rules)
+o_one = ops.attention(q, k, v, causal=True, mode="interpret")
+out["attn_maxerr"] = float(jnp.max(jnp.abs(o_sh - o_one)))
+
+# --- Runtime(kernel_ops=True) under the ambient mesh --------------------
+from repro.configs import get_config
+from repro.launch import steps as S_
+from repro.models.lm import LM, Runtime
+cfg = get_config("qwen3_8b", smoke=True)
+m_ko = LM(cfg, Runtime(rules=rules, mesh=mesh, remat=False,
+                       kernel_ops=True))
+m_tw = LM(cfg, Runtime(rules=rules, mesh=mesh, remat=False))
+params = m_tw.init_params(jax.random.PRNGKey(7))
+toks = jax.random.randint(jax.random.PRNGKey(8), (4, 32), 0, cfg.vocab)
+with jax.set_mesh(mesh):
+    psh = jax.device_put(params, S_.shardings_for(mesh, m_tw.param_specs()))
+    lm_batch = {"tokens": toks, "labels": toks}
+    l_ko = float(jax.jit(m_ko.loss)(psh, lm_batch))
+    l_tw = float(jax.jit(m_tw.loss)(psh, lm_batch))
+out["kernel_ops_loss_diff"] = abs(l_ko - l_tw)
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_kernel_dispatch_matches_single_device(tmp_path):
+    """docs/design.md §7: the MCFuser-tuned kernel dispatched through
+    shard_map (batch over data, features/heads over model) computes the
+    single-device fused kernel's numbers on the 2x4 host-device mesh."""
+    script = tmp_path / "sharded_ops.py"
+    script.write_text(SHARDED_OPS_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[-1][len("RESULT "):])
+    assert out["gemm_maxerr"] < 1e-3, out
+    assert out["attn_maxerr"] < 1e-3, out
+    # the dispatched schedule is the per-shard one, not the global one
+    assert out["mesh_bh"] <= out["local_h"], out
+    # the model wiring (Runtime(kernel_ops=True)) agrees with the twin
+    assert out["kernel_ops_loss_diff"] < 1e-3, out
+
+
 ELASTIC_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

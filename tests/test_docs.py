@@ -1,0 +1,19 @@
+"""Docs consistency: every markdown link / doc citation resolves.
+
+Runs the same checker as the CI docs lane (tools/check_docs.py) so the
+dangling-design-doc class of rot — eight modules once cited a design
+document that was never in the repo — is caught by tier-1 locally, not
+only in CI.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs import check  # noqa: E402
+
+
+def test_no_dangling_doc_references():
+    errors = check(ROOT)
+    assert not errors, "\n".join(errors)

@@ -1,0 +1,252 @@
+"""Mesh-aware analytical model (eq 2', docs/design.md §7).
+
+The contract, in order of importance:
+  1. a 1x1 mesh reproduces the single-chip numbers EXACTLY (the mesh
+     extension cannot perturb the paper's model);
+  2. collective time is monotone: grows with the sharded axis size,
+     shrinks with ici_bw;
+  3. tile selection genuinely differs per parallelism regime — the
+     reason the mesh must be visible to the search.
+"""
+import math
+
+import pytest
+
+from repro.core import api
+from repro.core.chain import attention_chain, gemm_chain
+from repro.core.perf_model import (MeshSpec, V5E, collective_bytes,
+                                   estimate, t_coll)
+from repro.core.pruning import generate_candidates
+from repro.core.ring import ring_traffic_bytes
+from repro.core.search import heuristic_search
+
+DP2_TP4 = MeshSpec(axes=(("data", 2), ("model", 4)),
+                   placement=(("h", "model"),), batch_axes=("data",))
+
+
+def ring4(n=4, ici_bw=50e9):
+    return MeshSpec(axes=(("model", n),), placement=(("n", "model"),),
+                    ici_bw=ici_bw)
+
+
+# ---------------------------------------------------------------------------
+# ring formulas
+# ---------------------------------------------------------------------------
+
+def test_ring_traffic_values():
+    assert ring_traffic_bytes("all-reduce", 100.0, 4) == pytest.approx(150.0)
+    assert ring_traffic_bytes("all-gather", 100.0, 4) == pytest.approx(75.0)
+    assert ring_traffic_bytes("reduce-scatter", 100.0, 4) == 300.0
+    assert ring_traffic_bytes("collective-permute", 100.0, 4) == 100.0
+    assert ring_traffic_bytes("all-reduce", 100.0, 1) == 0.0
+    with pytest.raises(ValueError):
+        ring_traffic_bytes("broadcast", 100.0, 4)
+
+
+# ---------------------------------------------------------------------------
+# 1x1 identity + localization
+# ---------------------------------------------------------------------------
+
+def test_unit_mesh_reproduces_single_chip_exactly():
+    ch = gemm_chain(512, 512, 256, 256)
+    one = MeshSpec(axes=(("data", 1), ("model", 1)),
+                   placement=(("h", "model"),), batch_axes=("data",))
+    assert one.is_single
+    assert one.localize(ch) is ch
+    for c in generate_candidates(ch):
+        assert estimate(c, V5E, one) == estimate(c, V5E)
+
+
+def test_localize_divides_placed_loops_and_batch():
+    ch = gemm_chain(1024, 1024, 256, 512, batch=8)
+    mesh = MeshSpec(axes=(("data", 2), ("model", 4)),
+                    placement=(("m", "data"), ("h", "model")),
+                    batch_axes=("data",))
+    lc = mesh.localize(ch)
+    assert lc.loops == {"m": 512, "n": 1024, "k": 256, "h": 128}
+    assert lc.batch == 4
+    assert ch.loops["m"] == 1024  # original untouched
+
+
+def test_search_on_unit_mesh_matches_meshless_search():
+    ch = gemm_chain(512, 512, 128, 128)
+    one = MeshSpec(axes=(("data", 1),), batch_axes=("data",))
+    r_none = heuristic_search(ch, seed=0)
+    r_one = heuristic_search(ch, mesh=one, seed=0)
+    assert r_none.best.key() == r_one.best.key()
+    assert r_none.best_time == r_one.best_time
+
+
+# ---------------------------------------------------------------------------
+# collective term
+# ---------------------------------------------------------------------------
+
+def test_spatial_sharding_is_collective_free():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    assert collective_bytes(DP2_TP4.localize(ch), DP2_TP4) == 0.0
+
+
+def test_collective_time_monotone_in_axis_size():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    prev = 0.0
+    for n in (2, 4, 8, 16):
+        mesh = ring4(n)
+        cb = collective_bytes(mesh.localize(ch), mesh)
+        assert cb > prev
+        prev = cb
+
+
+def test_collective_time_shrinks_with_ici_bw():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    s = heuristic_search(ch, mesh=ring4(4), seed=0).best
+    slow = t_coll(s, ring4(4, ici_bw=25e9))
+    fast = t_coll(s, ring4(4, ici_bw=100e9))
+    assert slow == pytest.approx(4 * fast)
+    assert fast > 0.0
+
+
+def test_reduction_sharding_prices_downstream_allreduce():
+    # sharding n (reduce dim of matmul_E) leaves a full-size partial E:
+    # ring all-reduce of M*H*4 bytes over 4 shards
+    ch = gemm_chain(1024, 1024, 256, 512)
+    mesh = ring4(4)
+    expect = ring_traffic_bytes("all-reduce", 1024 * 512 * 4, 4)
+    assert collective_bytes(mesh.localize(ch), mesh) == pytest.approx(expect)
+
+
+def test_softmax_combine_adds_stats_traffic():
+    # same shape: the attention chain's n-shard combine carries the
+    # running (max, sum) f32 pair on top of the plain output all-reduce
+    attn = attention_chain(1024, 1024, 128, 128)
+    plain = gemm_chain(1024, 1024, 128, 128)
+    mesh = ring4(4)
+    cb_attn = collective_bytes(mesh.localize(attn), mesh)
+    cb_plain = collective_bytes(mesh.localize(plain), mesh)
+    stats = ring_traffic_bytes("all-reduce", 2 * 4 * 1024, 4)
+    assert cb_attn == pytest.approx(cb_plain + stats)
+
+
+def test_estimate_includes_collectives():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    mesh = ring4(4)
+    s = heuristic_search(ch, mesh=mesh, seed=0).best
+    assert estimate(s, V5E, mesh) == pytest.approx(
+        estimate(s, V5E) + t_coll(s, mesh))
+
+
+# ---------------------------------------------------------------------------
+# tile selection per regime (the point of the whole extension)
+# ---------------------------------------------------------------------------
+
+def test_search_picks_different_tile_per_regime():
+    """Acceptance: a 2x4 mesh moves the best tile for >= 1 workload.
+
+    gemm_chain(1024, 1024, 256, 512) is the docs/tuning.md example: on
+    one chip the flat n(k,h) class wins (full 512-wide E row resident);
+    on the mesh each shard owns h=128 and the deep nk class wins."""
+    ch = gemm_chain(1024, 1024, 256, 512, dtype="bfloat16")
+    r_single = heuristic_search(ch, seed=0)
+    r_mesh = heuristic_search(ch, mesh=DP2_TP4, seed=0)
+    assert r_mesh.best.tile_sizes != r_single.best.tile_sizes
+    assert r_mesh.mesh is DP2_TP4 and r_single.mesh is None
+
+
+def test_mesh_search_tiles_fit_local_extents():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    best = heuristic_search(ch, mesh=DP2_TP4, seed=0).best
+    local = DP2_TP4.localize(ch)
+    for l, t in best.tile_sizes.items():
+        assert t <= local.loops[l]
+
+
+class _FakeMesh:
+    """Duck-typed mesh (only .shape is consulted on the tuner path)."""
+    shape = {"data": 2, "model": 4}
+
+
+def test_tuner_mesh_spec_matches_dispatch_placement():
+    from repro.dist.sharding import Rules
+    from repro.launch.mesh import tuner_mesh_spec
+
+    mesh = _FakeMesh()
+    rules = Rules(data=("data",), model="model", tp="model")
+    spec = tuner_mesh_spec(mesh, rules, batch=4, feature_dim=512)
+    assert spec.batch_axes == ("data",)
+    assert spec.placement == (("h", "model"),)
+    assert spec.axes == (("data", 2), ("model", 4))
+    # dispatcher's divisibility degradation: non-dividing dims replicate
+    assert tuner_mesh_spec(mesh, rules, batch=3,
+                           feature_dim=512).batch_axes == ()
+    assert tuner_mesh_spec(mesh, rules, batch=4,
+                           feature_dim=6).placement == ()
+    # attention dispatch folds head sharding into the CHAIN BATCH
+    # (ops.attention shards heads, never the Dv loop)
+    attn = tuner_mesh_spec(mesh, rules, kind="attention", batch=2,
+                           feature_dim=4)   # 4 kv heads % model=4 == 0
+    assert attn.placement == ()
+    assert attn.batch_axes == ("data", "model")
+    assert tuner_mesh_spec(mesh, rules, kind="attention", batch=2,
+                           feature_dim=2).batch_axes == ("data",)
+    # ring regime places the reduction loop, gated by ITS extent
+    ring = tuner_mesh_spec(mesh, rules, shard_reduction=True)
+    assert ring.placement == (("n", "model"),)
+    assert tuner_mesh_spec(mesh, rules, shard_reduction=True,
+                           reduction_dim=1024
+                           ).placement == (("n", "model"),)
+    assert tuner_mesh_spec(mesh, rules, shard_reduction=True,
+                           reduction_dim=6).placement == ()
+    with pytest.raises(ValueError):
+        tuner_mesh_spec(mesh, rules, kind="conv")
+
+
+def test_zero3_regime_never_duplicates_mesh_axes():
+    """ZeRO-3 routes the model axis through batch_axes (batch rides
+    every axis); the feature placement must then skip it — a mesh axis
+    may appear only once in a PartitionSpec / MeshSpec."""
+    from repro.dist.sharding import (Rules, batch_placement,
+                                     feature_placement)
+    from repro.launch.mesh import tuner_mesh_spec
+
+    mesh = _FakeMesh()
+    z3 = Rules(data=("data",), model="model", tp=None,
+               batch_axes=("data", "model"))
+    baxes = batch_placement(z3, mesh, 8)
+    assert baxes == ("data", "model")
+    assert feature_placement(z3, mesh, 512, taken=baxes) is None
+    spec = tuner_mesh_spec(mesh, z3, kind="attention", batch=8,
+                           feature_dim=4)
+    assert spec.batch_axes == ("data", "model")
+    assert spec.batch_factor() == 8          # not double-counted
+    assert tuner_mesh_spec(mesh, z3, batch=8,
+                           feature_dim=512).placement == ()
+
+
+def test_runtime_kernel_ops_matches_default_forward():
+    """Runtime(kernel_ops=True) routes cache-free attention through
+    kernels.ops; on CPU (no mesh) that is the GQA reference path and
+    must reproduce the streaming-twin forward."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.lm import LM, Runtime
+
+    cfg = get_config("qwen3_8b", smoke=True)
+    m1 = LM(cfg, Runtime(remat=False))
+    m2 = LM(cfg, Runtime(remat=False, kernel_ops=True))
+    params = m1.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    l1 = float(jax.jit(m1.loss)(params, batch))
+    l2 = float(jax.jit(m2.loss)(params, batch))
+    assert abs(l1 - l2) < 1e-5
+
+
+def test_api_cache_keyed_by_mesh():
+    api.clear_cache()
+    tk0 = api.fuse_gemm_chain(512, 512, 128, 256)
+    tk1 = api.fuse_gemm_chain(512, 512, 128, 256, mesh=DP2_TP4)
+    tk2 = api.fuse_gemm_chain(512, 512, 128, 256, mesh=DP2_TP4)
+    assert tk1 is tk2       # same regime: cached
+    assert tk0 is not tk1   # regime is part of the key
+    # the mesh-tuned kernel is parametrized for the LOCAL block
+    assert tk1.params.bh <= 256 // 4
