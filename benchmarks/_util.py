@@ -1,0 +1,23 @@
+"""Shared benchmark plumbing."""
+import contextlib
+import os
+import tempfile
+
+
+@contextlib.contextmanager
+def isolated_schedule_cache():
+    """Benchmarks must measure *searches*, not the machine's populated
+    ``~/.cache/repro/schedules`` — a warm disk cache would silently
+    turn reported tuning_s numbers into ~1 ms disk rebuilds.  Points
+    REPRO_CACHE_DIR at a throwaway dir, restoring the caller's value
+    on exit."""
+    prev = os.environ.get("REPRO_CACHE_DIR")
+    with tempfile.TemporaryDirectory(prefix="repro-bench-") as d:
+        os.environ["REPRO_CACHE_DIR"] = d
+        try:
+            yield d
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_CACHE_DIR", None)
+            else:
+                os.environ["REPRO_CACHE_DIR"] = prev

@@ -76,11 +76,13 @@ def run(verify: bool = True) -> list[dict]:
 
 def main():
     print("name,us_per_call,derived")
-    for r in run():
+    rows = run()
+    for r in rows:
         print(f"attn_{r['name']},{r['us_fused']:.2f},"
               f"vs_unfused={r['speedup_vs_unfused']:.2f}x "
               f"vs_flash128={r['speedup_vs_flash']:.2f}x "
               f"blocks=({r['bq']},{r['bkv']}) err={r['max_abs_err']:.2e}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -72,10 +72,12 @@ def run(verify: bool = True) -> list[dict]:
 
 def main():
     print("name,us_per_call,derived")
-    for r in run():
+    rows = run()
+    for r in rows:
         print(f"gemm_{r['name']},{r['us_fused']:.2f},"
               f"speedup={r['speedup']:.2f}x sched={r['schedule']} "
               f"tune={r['tuning_s']:.2f}s err={r['max_abs_err']:.2e}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,29 +1,46 @@
-"""Paper Table IV: tuning time.
+"""Paper Table IV: tuning time — now with tuning itself as a fast path.
 
 MCFuser's claim: the analytical model + pruning means only a handful of
-candidates are ever *measured*, so tuning takes seconds, not hours.  We
-report per workload:
-  * tune_s        — wall-clock of the full MCFuser search (this machine)
-  * n_candidates  — post-pruning space size
-  * n_measured    — candidates actually measured (top-k per iteration)
-  * exhaustive_s  — projected cost of measuring EVERY candidate at the
-                    measured per-candidate cost (the Ansor-style 1000+
-                    trial regime is a lower bound on this)
-  * ratio         — exhaustive_s / tune_s (the paper's 70x+)
+candidates are ever *measured*, so tuning takes seconds, not hours.
+PR 3 makes the model itself batched (``core.batch_model``): the search
+prices whole tile matrices as array math and materializes Schedules
+only for measured candidates.  We report per workload:
+
+  * tune_s          — wall-clock of the batched MCFuser search
+  * tune_scalar_s   — same search on the per-Schedule reference engine
+  * engine_speedup  — tune_scalar_s / tune_s (target: >= 5x on GEMM
+                      chains, with bit-identical best schedules)
+  * n_candidates    — post-pruning space size
+  * n_measured      — candidates actually measured (top-k per iteration)
+  * exhaustive_s    — projected cost of measuring EVERY candidate at the
+                      measured per-candidate cost (the Ansor-style 1000+
+                      trial regime is a lower bound on this)
+  * ratio           — exhaustive_s / tune_s (the paper's 70x+)
+
+``--smoke`` is the CI lane (fast, asserting): batched == scalar best
+key on two workloads, batched tuning inside a generous budget, and a
+warm disk-cache ``fuse_gemm_chain`` (fresh process semantics: in-memory
+cache cleared) rebuilding without search inside its own budget.
 """
+import argparse
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import api
 from repro.core.chain import attention_chain, gemm_chain
-from repro.core.codegen import to_gemm_chain_params
 from repro.core.search import heuristic_search
 from repro.kernels.gemm_chain import fused_gemm_chain
 
+from ._util import isolated_schedule_cache
 from .workloads import ATTENTION, GEMM_CHAINS
+
+# CI smoke budgets — generous: CI runners are slow and shared.  The
+# point is to catch order-of-magnitude regressions (an accidental
+# de-vectorization, a cache that stopped hitting), not 10% noise.
+SMOKE_TUNE_BUDGET_S = 5.0        # batched search, per workload
+SMOKE_WARM_BUDGET_S = 0.5        # disk-cache rebuild, per shape
 
 
 def measured_cost_per_candidate() -> float:
@@ -37,43 +54,130 @@ def measured_cost_per_candidate() -> float:
     return time.perf_counter() - t0
 
 
+def _bench_chain(name: str, ch, per_trial: float, reps: int = 5) -> dict:
+    """Best-of-``reps`` wall-clock per engine (the search is
+    deterministic, so min-of-N isolates engine cost from container
+    scheduling noise).  The first batched rep is also reported
+    separately as ``tune_cold_s``: it builds + prices the candidate
+    matrix, which later reps reuse from the in-process structure memo —
+    exactly what a serving process pays when re-tuning a layer shape.
+    """
+    t0 = time.perf_counter()
+    rep = heuristic_search(ch, seed=0, engine="batch")
+    cold = time.perf_counter() - t0
+    dt, dt_scalar = cold, float("inf")
+    for _ in range(reps - 1):
+        t0 = time.perf_counter()
+        rep = heuristic_search(ch, seed=0, engine="batch")
+        dt = min(dt, time.perf_counter() - t0)
+    for _ in range(max(1, reps - 1)):
+        t0 = time.perf_counter()
+        rep_scalar = heuristic_search(ch, seed=0, engine="scalar")
+        dt_scalar = min(dt_scalar, time.perf_counter() - t0)
+    exhaustive = rep.n_candidates * per_trial
+    return {"name": name, "tune_s": dt, "tune_cold_s": cold,
+            "tune_scalar_s": dt_scalar,
+            "engine_speedup": dt_scalar / max(dt, 1e-9),
+            "keys_match": rep.best.key() == rep_scalar.best.key(),
+            "n_candidates": rep.n_candidates,
+            "n_measured": rep.n_measured,
+            "best_est_s": rep.best_time,
+            "exhaustive_s": exhaustive,
+            "ratio": exhaustive / max(dt, 1e-9)}
+
+
+def _warm_engines() -> None:
+    """One throwaway search per engine so the first timed workload does
+    not pay numpy/module warmup."""
+    ch = gemm_chain(256, 256, 64, 64, dtype="bfloat16")
+    heuristic_search(ch, seed=0, engine="batch")
+    heuristic_search(ch, seed=0, engine="scalar")
+
+
 def run() -> list[dict]:
     api.clear_cache()
     per_trial = measured_cost_per_candidate()
+    _warm_engines()
     rows = []
     for name, (b, m, n, k, h) in list(GEMM_CHAINS.items())[:6]:
         ch = gemm_chain(m, n, k, h, batch=b, dtype="bfloat16")
-        t0 = time.perf_counter()
-        rep = heuristic_search(ch, seed=0)
-        dt = time.perf_counter() - t0
-        exhaustive = rep.n_candidates * per_trial
-        rows.append({"name": f"gemm_{name}", "tune_s": dt,
-                     "n_candidates": rep.n_candidates,
-                     "n_measured": rep.n_measured,
-                     "exhaustive_s": exhaustive,
-                     "ratio": exhaustive / max(dt, 1e-9)})
+        rows.append(_bench_chain(f"gemm_{name}", ch, per_trial))
     for name, (heads, m, n, k, h, _) in list(ATTENTION.items())[:5]:
         ch = attention_chain(m, n, k, h, heads=heads, dtype="bfloat16")
-        t0 = time.perf_counter()
-        rep = heuristic_search(ch, seed=0)
-        dt = time.perf_counter() - t0
-        exhaustive = rep.n_candidates * per_trial
-        rows.append({"name": f"attn_{name}", "tune_s": dt,
-                     "n_candidates": rep.n_candidates,
-                     "n_measured": rep.n_measured,
-                     "exhaustive_s": exhaustive,
-                     "ratio": exhaustive / max(dt, 1e-9)})
+        rows.append(_bench_chain(f"attn_{name}", ch, per_trial))
     return rows
+
+
+def smoke() -> int:
+    """CI lane: exit 1 on any correctness or wall-clock regression."""
+    failures = []
+    _warm_engines()
+    for name, (b, m, n, k, h) in [("G1", GEMM_CHAINS["G1"]),
+                                  ("G5", GEMM_CHAINS["G5"])]:
+        ch = gemm_chain(m, n, k, h, batch=b, dtype="bfloat16")
+        t0 = time.perf_counter()
+        rb = heuristic_search(ch, seed=0, engine="batch")
+        dt = time.perf_counter() - t0
+        rs = heuristic_search(ch, seed=0, engine="scalar")
+        if rb.best.key() != rs.best.key():
+            failures.append(f"{name}: batch/scalar best keys diverge: "
+                            f"{rb.best.key()} vs {rs.best.key()}")
+        if dt > SMOKE_TUNE_BUDGET_S:
+            failures.append(f"{name}: batched tune {dt:.2f}s > "
+                            f"{SMOKE_TUNE_BUDGET_S}s budget")
+        print(f"smoke tune {name}: {dt*1e3:.1f}ms "
+              f"keys_match={rb.best.key() == rs.best.key()}")
+
+    with isolated_schedule_cache():
+        try:
+            api.clear_cache()
+            cold = api.fuse_gemm_chain(512, 512, 128, 128,
+                                       dtype="bfloat16")
+            if cold.source != "search":
+                failures.append("cold fuse did not search "
+                                f"(source={cold.source})")
+            api.clear_cache()  # in-memory only: simulates a restart
+            t0 = time.perf_counter()
+            warm = api.fuse_gemm_chain(512, 512, 128, 128,
+                                       dtype="bfloat16")
+            dt = time.perf_counter() - t0
+            if warm.source != "disk":
+                failures.append("warm fuse missed the disk cache "
+                                f"(source={warm.source})")
+            if warm.report.best.key() != cold.report.best.key():
+                failures.append("warm schedule != cold schedule")
+            if dt > SMOKE_WARM_BUDGET_S:
+                failures.append(f"warm fuse {dt:.3f}s > "
+                                f"{SMOKE_WARM_BUDGET_S}s budget")
+            print(f"smoke warm fuse: {dt*1e3:.1f}ms source={warm.source}")
+        finally:
+            api.clear_cache()
+
+    for f in failures:
+        print(f"SMOKE FAIL: {f}", file=sys.stderr)
+    print(f"smoke: {'FAIL' if failures else 'OK'}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 def main():
     print("name,us_per_call,derived")
-    for r in run():
+    rows = run()
+    for r in rows:
         print(f"tune_{r['name']},{r['tune_s']*1e6:.0f},"
               f"cands={r['n_candidates']} measured={r['n_measured']} "
+              f"cold={r['tune_cold_s']*1e6:.0f}us "
+              f"scalar_engine={r['tune_scalar_s']*1e6:.0f}us "
+              f"engine_speedup={r['engine_speedup']:.1f}x "
+              f"keys_match={'yes' if r['keys_match'] else 'NO'} "
               f"exhaustive={r['exhaustive_s']:.1f}s "
               f"speedup={r['ratio']:.0f}x")
+    return rows
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI lane with wall-clock budgets")
+    if ap.parse_args().smoke:
+        sys.exit(smoke())
     main()

@@ -1,38 +1,93 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and persist the perf trajectory as machine-readable JSON:
+#
+#   BENCH_tuning.json   — tune_s / n_measured / exhaustive ratio and the
+#                         batched-vs-scalar engine speedup per workload
+#                         (bench_tuning_time rows)
+#   BENCH_kernels.json  — best estimated kernel times + speedups per
+#                         GEMM-chain / attention workload
+#                         (bench_gemm_chain + bench_attention rows)
+#
+# The JSON files are committed at the repo root so regressions are
+# diffable across PRs; ``tools/check_docs.py`` verifies any doc that
+# cites them.  Run with ``--no-json`` to skip rewriting them.
+import argparse
 import contextlib
 import io
+import json
 import sys
 import traceback
+from pathlib import Path
+
+from ._util import isolated_schedule_cache
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
-def main() -> None:
+def _write_json(path: Path, payload: dict) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=str(REPO_ROOT),
+                    help="where BENCH_*.json land (default: repo root)")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args(argv)
+
     from . import (bench_ablation, bench_attention, bench_end_to_end,
                    bench_gemm_chain, bench_mesh_tuning,
                    bench_model_accuracy, bench_tuning_time, roofline)
 
+    rows_by_mod: dict[str, list] = {}
     print("name,us_per_call,derived")
-    for mod, label in [
-        (bench_gemm_chain, "Table II / Fig 8ab"),
-        (bench_attention, "Table III / Fig 8cd"),
-        (bench_end_to_end, "Fig 9"),
-        (bench_tuning_time, "Table IV"),
-        (bench_mesh_tuning, "mesh-aware tuning (docs/tuning.md)"),
-        (bench_model_accuracy, "Figs 10-11"),
-        (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
-        (roofline, "Roofline summary (dry-run artifacts)"),
-    ]:
-        print(f"# --- {mod.__name__} ({label}) ---", file=sys.stderr)
-        try:
-            buf = io.StringIO()
-            with contextlib.redirect_stdout(buf):
-                mod.main()
-            for line in buf.getvalue().splitlines():
-                if line.strip() == "name,us_per_call,derived":
-                    continue  # each bench prints its own header; drop dups
-                print(line)
-        except Exception:
-            traceback.print_exc()
-            print(f"{mod.__name__},0,ERROR")
+    with isolated_schedule_cache():
+        for mod, label in [
+            (bench_gemm_chain, "Table II / Fig 8ab"),
+            (bench_attention, "Table III / Fig 8cd"),
+            (bench_end_to_end, "Fig 9"),
+            (bench_tuning_time, "Table IV"),
+            (bench_mesh_tuning, "mesh-aware tuning (docs/tuning.md)"),
+            (bench_model_accuracy, "Figs 10-11"),
+            (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
+            (roofline, "Roofline summary (dry-run artifacts)"),
+        ]:
+            print(f"# --- {mod.__name__} ({label}) ---", file=sys.stderr)
+            try:
+                buf = io.StringIO()
+                with contextlib.redirect_stdout(buf):
+                    rows = mod.main()
+                if rows:
+                    rows_by_mod[mod.__name__.rsplit(".", 1)[-1]] = rows
+                for line in buf.getvalue().splitlines():
+                    # each bench prints its own CSV header; drop dups
+                    if line.strip() == "name,us_per_call,derived":
+                        continue
+                    print(line)
+            except Exception:
+                traceback.print_exc()
+                print(f"{mod.__name__},0,ERROR")
+
+    if args.no_json:
+        return
+    out = Path(args.json_dir)
+    tuning = rows_by_mod.get("bench_tuning_time")
+    if tuning:
+        _write_json(out / "BENCH_tuning.json", {
+            "schema": 1,
+            "workloads": tuning,
+        })
+    kernels = {}
+    if "bench_gemm_chain" in rows_by_mod:
+        kernels["gemm_chains"] = rows_by_mod["bench_gemm_chain"]
+    if "bench_attention" in rows_by_mod:
+        kernels["attention"] = rows_by_mod["bench_attention"]
+    if kernels:
+        kernels["schema"] = 1
+        _write_json(out / "BENCH_kernels.json", kernels)
 
 
 if __name__ == '__main__':

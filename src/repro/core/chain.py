@@ -67,6 +67,18 @@ class Chain:
     ops: tuple[OpSpec, ...]
     batch: int = 1  # leading batch (mapped to extra grid axis, untiled)
 
+    def signature(self) -> tuple:
+        """Hashable content identity (Chain holds dicts, so the
+        dataclass itself is unhashable).  Everything search-space
+        generation reads is included; used to memoize per-chain
+        candidate matrices (``pruning.generate_candidates_batch``)."""
+        return (self.name, tuple(self.loops.items()),
+                tuple((t.name, t.dims, t.dtype)
+                      for t in self.tensors.values()),
+                tuple((o.name, o.out, o.ins, o.reduce_dims, o.epilogue,
+                       o.flops_per_point) for o in self.ops),
+                self.batch)
+
     # ---- derived sets -------------------------------------------------
     def producers(self) -> dict[str, OpSpec]:
         return {op.out: op for op in self.ops}

@@ -55,3 +55,21 @@ def to_gemm_chain_params(sched: Schedule) -> GemmChainParams:
 def to_attention_params(sched: Schedule) -> AttentionParams:
     ts = sched.tile_sizes
     return AttentionParams(bq=ts["m"], bkv=ts["n"])
+
+
+# Chain-kind registry: the persistent schedule cache (core.schedule_cache
+# via core.api) re-derives params from a rebuilt Schedule and
+# cross-checks them against the stored kwargs, so a cache entry can
+# never dispatch a kernel this extractor would not emit.
+PARAMS_BY_KIND = {
+    "gemm": to_gemm_chain_params,
+    "attn": to_attention_params,
+}
+
+
+def params_for(kind: str, sched: Schedule):
+    try:
+        extract = PARAMS_BY_KIND[kind]
+    except KeyError:
+        raise ValueError(f"unknown chain kind {kind!r}") from None
+    return extract(sched)

@@ -60,6 +60,13 @@ class Schedule:
     needs_rescale: bool = False       # online-softmax streaming consumer
     cached_intermediates: dict[str, int] = field(default_factory=dict)
     # ^ intermediate -> buffer multiplicity (Rule-2 blow-up factor)
+    cached_dim_sets: dict[str, tuple[tuple[str, ...], ...]] = \
+        field(default_factory=dict)
+    # ^ intermediate -> dim sets whose tile *extents* multiply into the
+    #   Rule-2 blow-up.  The multiplicity above is the max over these
+    #   sets of prod(ceil(dim/tile)); recording the sets (structural,
+    #   tile-independent) lets batch_model re-price the blow-up for a
+    #   whole tile matrix without re-running placement.
 
     # ---- extents -----------------------------------------------------
     def extent(self, loop: str) -> int:
@@ -196,10 +203,16 @@ def build_schedule(chain: Chain, expr: Scope, tile_sizes: dict[str, int],
                     # implicit sweep over related loops no longer enclosing
                     path = new_path
                     mult = 1
+                    dim_set: list[str] = []
                     for d in chain.tensors[p.out].dims:
                         if d in inner or (d in tree and r in tree[d][:-1]):
+                            dim_set.append(d)
                             mult *= math.ceil(
                                 chain.loops[d] / tile_sizes[d])
+                    if dim_set:
+                        sched.cached_dim_sets[p.out] = (
+                            sched.cached_dim_sets.get(p.out, ())
+                            + (tuple(dim_set),))
                     if mult > 1:
                         sched.cached_intermediates[p.out] = max(
                             sched.cached_intermediates.get(p.out, 1), mult)

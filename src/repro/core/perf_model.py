@@ -33,6 +33,12 @@ from .chain import Chain, DTYPE_BYTES
 from .dag import Schedule
 from .ring import ring_traffic_bytes
 
+# Bump whenever the analytical model's *output* can change for a fixed
+# (chain, tile assignment, mesh) — new terms, retuned constants, changed
+# hoisting semantics.  core.schedule_cache folds this into every disk
+# key, so persisted schedules from an older model never resurface.
+MODEL_VERSION = 3
+
 
 @dataclass(frozen=True)
 class TpuSpec:
@@ -115,6 +121,19 @@ class MeshSpec:
     def is_single(self) -> bool:
         return (self.batch_factor() == 1
                 and all(self.axis_size(a) == 1 for _, a in self.placement))
+
+    def canonical(self) -> tuple:
+        """Everything the tuner's output depends on, mesh-wise:
+        localization is a function of per-loop split factors and the
+        batch factor; the collective term of eq (2') prices each
+        (placed loop, axis size) ring separately.  Two MeshSpecs with
+        equal canonical forms yield identical searches — e.g. a 2x4 and
+        a 4x2 mesh sharding the same loop 4-ways — so this (not the raw
+        spec) keys the persistent schedule cache."""
+        return (tuple(sorted((l, self.axis_size(a))
+                             for l, a in self.placement
+                             if self.axis_size(a) > 1)),
+                self.batch_factor(), self.ici_bw)
 
     def localize(self, chain: Chain) -> Chain:
         """The per-shard sub-problem: every placed loop's extent divided

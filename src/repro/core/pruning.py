@@ -19,6 +19,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Iterable, Iterator
 
+import numpy as np
+
+from .batch_model import ExprClassTable, class_key
 from .chain import Chain
 from .dag import Schedule, build_schedule
 from .perf_model import TpuSpec, V5E, vmem_estimate
@@ -118,6 +121,188 @@ def generate_candidates(chain: Chain, hw: TpuSpec = V5E, unit: int = 128,
         final.append(sched)
     stats.n_kept = len(final)
     return final
+
+
+# ---------------------------------------------------------------------------
+# Batched candidate generation (the tuning hot path, docs/tuning.md)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PricedClass:
+    """One Rule-1 expression class priced over the full tile matrix."""
+
+    table: ExprClassTable
+    multiplicity: int          # how many raw expressions share the class
+    est: np.ndarray            # eq (2) estimate per tile row (no t_coll)
+    vmem: np.ndarray           # Rule-4 residency per tile row
+    valid: np.ndarray          # hard-Rule-2 mask per tile row
+    keep: np.ndarray           # valid & fits-VMEM (candidate membership)
+
+
+@dataclass
+class CandidateMatrix:
+    """The whole pruned search space as arrays: every kept expression
+    class priced against the shared Rule-3-filtered tile matrix.
+
+    ``candidates`` lists (class_idx, row) pairs in exactly the order
+    ``generate_candidates`` yields Schedule objects, so the batched
+    search visits an identical space — but a ``Schedule`` is only
+    materialized for candidates that get *measured* and for the final
+    winner (``materialize``).
+    """
+
+    chain: Chain
+    hw: TpuSpec
+    unit: int
+    names: tuple[str, ...]
+    cand_tiles: tuple[tuple[int, ...], ...]   # per-loop Rule-3-ok tiles
+    tiles: np.ndarray                         # (A, L) cartesian product
+    classes: list[PricedClass]
+    candidates: list[tuple[int, int]]
+    stats: PruneStats
+
+    def __post_init__(self) -> None:
+        s, rev = 1, []
+        for c in reversed(self.cand_tiles):
+            rev.append(s)
+            s *= len(c)
+        self._strides = tuple(reversed(rev))
+        self._col = {n: i for i, n in enumerate(self.names)}
+        self._tile_idx = tuple({t: i for i, t in enumerate(c)}
+                               for c in self.cand_tiles)
+        self._sorted_cols = tuple(sorted(range(len(self.names)),
+                                         key=self.names.__getitem__))
+        self._rows = self.tiles.tolist()   # python ints: fast row access
+
+    # ---- row index arithmetic ----------------------------------------
+    def row_with(self, row: int, loop: str, tile: int) -> int:
+        """Row index after substituting one loop's tile (mutation)."""
+        li = self._col[loop]
+        stride = self._strides[li]
+        old_idx = (row // stride) % len(self.cand_tiles[li])
+        return row + (self._tile_idx[li][tile] - old_idx) * stride
+
+    def tile_at(self, row: int, loop: str) -> int:
+        return self._rows[row][self._col[loop]]
+
+    def tile_sizes(self, row: int) -> dict[str, int]:
+        r = self._rows[row]
+        return {n: r[i] for i, n in enumerate(self.names)}
+
+    def est_of(self, cand: tuple[int, int]) -> float:
+        return float(self.classes[cand[0]].est[cand[1]])
+
+    def key(self, cand: tuple[int, int]) -> tuple:
+        """``Schedule.key()`` without building the Schedule."""
+        ci, row = cand
+        t = self.classes[ci].table
+        r = self._rows[row]
+        return (t.sub_expr, frozenset(t.grid),
+                tuple((self.names[c], r[c]) for c in self._sorted_cols))
+
+    def materialize(self, cand: tuple[int, int]) -> Schedule:
+        ci, row = cand
+        return build_schedule(self.chain, self.classes[ci].table.expr,
+                              self.tile_sizes(row), hard_rule2=True)
+
+
+# Priced candidate matrices are pure functions of (chain, hw, unit);
+# serving re-tunes the same layer shapes over and over (per seed, per
+# mesh regime with identical localization), so memoize a handful.
+_MATRIX_CACHE: dict[tuple, CandidateMatrix] = {}
+_MATRIX_CACHE_MAX = 64
+
+
+def generate_candidates_batch(chain: Chain, hw: TpuSpec = V5E,
+                              unit: int = 128,
+                              stats: PruneStats | None = None,
+                              exprs: Iterable[Scope] | None = None,
+                              ) -> CandidateMatrix:
+    """Array-based ``generate_candidates``: identical candidate set,
+    identical ``PruneStats``, no per-candidate ``build_schedule``.
+
+    Rules become array ops: Rule 3 filters per-loop tile lists before
+    the cartesian product, Rule 1 keeps the first expression per
+    (sub-expression, grid) class (all tile rows of equal-class
+    expressions collide pairwise), Rule 2 and Rule 4 are boolean masks
+    from ``batch_model``.  Placement runs once per class (a handful of
+    ``build_schedule`` calls on a reference assignment) instead of once
+    per candidate.
+
+    Results are memoized on ``Chain.signature()`` (default ``exprs``
+    only): the matrix is immutable from the search's point of view, so
+    repeated tuning of the same chain — different seeds, mesh regimes
+    with identical localization, benchmark repetitions — skips straight
+    to the evolutionary loop.
+    """
+    memo_key = None
+    if exprs is None:
+        memo_key = (chain.signature(), hw, unit)
+        hit = _MATRIX_CACHE.get(memo_key)
+        if hit is not None:
+            if stats is not None:
+                stats.__dict__.update(hit.stats.as_dict())
+            return hit
+        exprs = enumerate_tilings(chain)
+    exprs = list(exprs)
+    if stats is None:
+        stats = PruneStats()
+    stats.n_exprs = len(exprs)
+
+    names = tuple(chain.loops)
+    n_raw_tiles = 1
+    for n in names:
+        n_raw_tiles *= len(candidate_tile_sizes(chain.loops[n], unit=unit))
+    stats.n_total = len(exprs) * n_raw_tiles
+
+    cand_tiles = tuple(
+        tuple(t for t in candidate_tile_sizes(chain.loops[n], unit=unit)
+              if rule3_padding_ok(chain.loops[n], t, unit))
+        for n in names)
+    tiles = np.asarray(list(itertools.product(*cand_tiles)),
+                       dtype=np.int64).reshape(-1, len(names))
+    stats.n_rule3 = (n_raw_tiles - tiles.shape[0]) * len(exprs)
+
+    budget = hw.vmem_slack * hw.vmem_bytes
+    by_class: dict[tuple, int] = {}
+    classes: list[PricedClass] = []
+    candidates: list[tuple[int, int]] = []
+    for expr in exprs:
+        ck = class_key(chain, expr)
+        if ck in by_class:
+            # Rule 1: every tile row of this expression collides with
+            # the first-seen expression of its class
+            pc = classes[by_class[ck]]
+            pc.multiplicity += 1
+            stats.n_rule2 += int((~pc.valid).sum())
+            continue
+        table = ExprClassTable.build(chain, expr, unit=unit)
+        priced = table.price(tiles, hw)
+        est, vmem, valid = priced.est, priced.vmem, priced.valid
+        keep = valid & (vmem <= budget)
+        pc = PricedClass(table=table, multiplicity=1, est=est,
+                         vmem=vmem, valid=valid, keep=keep)
+        by_class[ck] = len(classes)
+        classes.append(pc)
+        stats.n_rule2 += int((~valid).sum())
+        ci = len(classes) - 1
+        for row in np.flatnonzero(valid):
+            if keep[row]:
+                candidates.append((ci, int(row)))
+            else:
+                stats.n_rule4 += 1
+    stats.n_after_dedup = sum(int(pc.valid.sum()) for pc in classes)
+    stats.n_expr_classes = sum(1 for pc in classes if pc.valid.any())
+    stats.n_kept = len(candidates)
+    cm = CandidateMatrix(chain=chain, hw=hw, unit=unit, names=names,
+                         cand_tiles=cand_tiles, tiles=tiles,
+                         classes=classes, candidates=candidates,
+                         stats=stats)
+    if memo_key is not None:
+        if len(_MATRIX_CACHE) >= _MATRIX_CACHE_MAX:
+            _MATRIX_CACHE.pop(next(iter(_MATRIX_CACHE)))
+        _MATRIX_CACHE[memo_key] = cm
+    return cm
 
 
 def expression_classes(chain: Chain, hard_rule2: bool = False) -> dict[str, Scope]:

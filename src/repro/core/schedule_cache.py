@@ -1,0 +1,188 @@
+"""Persistent on-disk schedule cache — tuning survives process restarts.
+
+``core.api._CACHE`` makes tuning free *within* a process; this module
+makes it free *across* processes: every tuned schedule is persisted as
+one JSON file under ``REPRO_CACHE_DIR`` (default
+``~/.cache/repro/schedules``), keyed by the same signature the
+in-memory cache uses plus a schema/model version hash.  A serving
+restart — or a dry-run sweep spawning hundreds of cells over the same
+layer shapes — then rebuilds each fused kernel from disk in well under
+10 ms instead of re-running ``heuristic_search``.
+
+What is stored is the *search outcome*, not the kernel: the winning
+tiling expression (serialized loop tree), tile sizes, and the report
+telemetry.  Rebuilding runs one ``build_schedule`` + codegen pass, so
+the warm path exercises exactly the code the cold path does after its
+search — a cache hit can never produce a schedule the tuner would not
+have produced.
+
+Invalidation is structural: the key hash folds in ``SCHEMA_VERSION``
+(this file's payload layout), ``perf_model.MODEL_VERSION`` (the
+analytical model's semantics), and the hardware spec's constants, so
+bumping any of them orphans old entries rather than misreading them.
+Corrupt or truncated files are treated as misses (the tuner simply
+runs).  Set ``REPRO_SCHEDULE_CACHE=0`` to disable persistence entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import tempfile
+from hashlib import sha256
+from pathlib import Path
+from typing import Optional
+
+from .perf_model import MODEL_VERSION, TpuSpec
+from .tiling import Loop, Scope
+
+# Payload layout version: bump when the JSON record's fields change.
+SCHEMA_VERSION = 1
+
+_ENV_DIR = "REPRO_CACHE_DIR"
+_ENV_ENABLE = "REPRO_SCHEDULE_CACHE"
+_ENTRY_NAME = re.compile(r"[0-9a-f]{32}\.json")
+
+
+def enabled() -> bool:
+    return os.environ.get(_ENV_ENABLE, "1") != "0"
+
+
+def cache_dir() -> Path:
+    root = os.environ.get(_ENV_DIR)
+    if root:
+        return Path(root)
+    return Path.home() / ".cache" / "repro" / "schedules"
+
+
+def model_fingerprint(hw: TpuSpec) -> str:
+    """Hash of everything that can silently change a tuned outcome."""
+    payload = json.dumps(
+        [SCHEMA_VERSION, MODEL_VERSION,
+         sorted(dataclasses.asdict(hw).items())],
+        sort_keys=True, default=str)
+    return sha256(payload.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Tiling-expression (de)serialization: Loop tree <-> nested lists
+# ---------------------------------------------------------------------------
+
+def expr_to_json(scope: Scope) -> list:
+    return [[l.name, expr_to_json(l.body)] for l in scope]
+
+
+def expr_from_json(data: list) -> Scope:
+    return tuple(Loop(str(name), expr_from_json(body))
+                 for name, body in data)
+
+
+# ---------------------------------------------------------------------------
+# Load / store
+# ---------------------------------------------------------------------------
+
+def entry_path(key: tuple, hw: TpuSpec) -> Path:
+    blob = json.dumps([list(key), model_fingerprint(hw)], sort_keys=True,
+                      default=str)
+    return cache_dir() / (sha256(blob.encode()).hexdigest()[:32] + ".json")
+
+
+def load(key: tuple, hw: TpuSpec) -> Optional[dict]:
+    """The persisted record for ``key``, or None on miss/corruption.
+
+    Returns a dict with ``expr`` (Scope), ``tile_sizes``
+    (dict[str, int]), ``best_time``, ``n_measured``, ``n_iterations``,
+    ``n_candidates``, ``prune_stats``, ``history``, ``params``.
+    """
+    if not enabled():
+        return None
+    path = entry_path(key, hw)
+    try:
+        with open(path, encoding="utf-8") as f:
+            rec = json.load(f)
+        if rec["schema"] != SCHEMA_VERSION:
+            return None
+        if rec["key"] != _jsonable_key(key):
+            return None  # hash collision paranoia
+        return {
+            "expr": expr_from_json(rec["expr"]),
+            "tile_sizes": {str(k): int(v)
+                           for k, v in rec["tile_sizes"].items()},
+            "best_time": float(rec["best_time"]),
+            "n_measured": int(rec["n_measured"]),
+            "n_iterations": int(rec["n_iterations"]),
+            "n_candidates": int(rec["n_candidates"]),
+            "prune_stats": dict(rec["prune_stats"]),
+            "history": [(int(i), float(t)) for i, t in rec["history"]],
+            "params": dict(rec["params"]),
+        }
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return None  # corrupt / truncated / foreign file: treat as miss
+
+
+def _jsonable_key(key: tuple) -> list:
+    # json round-trip normalizes tuples to lists so stored-key equality
+    # checks compare like with like
+    return json.loads(json.dumps(list(key), default=str))
+
+
+def store(key: tuple, hw: TpuSpec, *, expr: Scope,
+          tile_sizes: dict[str, int], best_time: float, n_measured: int,
+          n_iterations: int, n_candidates: int, prune_stats: dict,
+          history: list, params: dict) -> Optional[Path]:
+    """Persist one search outcome; best-effort (failures are silent —
+    a read-only filesystem must not break tuning)."""
+    if not enabled():
+        return None
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "model_fingerprint": model_fingerprint(hw),
+        "key": _jsonable_key(key),
+        "expr": expr_to_json(expr),
+        "tile_sizes": {k: int(v) for k, v in tile_sizes.items()},
+        "best_time": float(best_time),
+        "n_measured": int(n_measured),
+        "n_iterations": int(n_iterations),
+        "n_candidates": int(n_candidates),
+        "prune_stats": {k: int(v) for k, v in prune_stats.items()},
+        "history": [[int(i), float(t)] for i, t in history],
+        "params": params,
+    }
+    path = entry_path(key, hw)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(rec, f)
+            os.replace(tmp, path)  # atomic: concurrent readers never
+        finally:                   # see a half-written entry
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+    except OSError:
+        return None
+
+
+def clear() -> int:
+    """Delete every cache entry; returns the number removed.
+
+    Only files matching this module's ``<32-hex>.json`` naming are
+    touched — REPRO_CACHE_DIR may legitimately point at a shared
+    scratch dir holding other tools' JSON artifacts.
+    """
+    n = 0
+    d = cache_dir()
+    if d.is_dir():
+        for p in d.glob("*.json"):
+            if not _ENTRY_NAME.fullmatch(p.name):
+                continue
+            try:
+                p.unlink()
+                n += 1
+            except OSError:
+                pass
+    return n

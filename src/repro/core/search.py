@@ -23,7 +23,8 @@ from .chain import Chain
 from .dag import Schedule, build_schedule
 from .perf_model import (MeshSpec, TpuSpec, V5E, collective_bytes, estimate,
                          vmem_estimate)
-from .pruning import PruneStats, generate_candidates, rule3_padding_ok
+from .pruning import (CandidateMatrix, PruneStats, generate_candidates,
+                      generate_candidates_batch, rule3_padding_ok)
 from .tiling import candidate_tile_sizes
 
 
@@ -76,7 +77,8 @@ def heuristic_search(chain: Chain,
                      epsilon: float = 0.01,        # convergence criterion
                      max_iterations: int = 32,     # safety net only
                      unit: int = 128,
-                     seed: int = 0) -> SearchReport:
+                     seed: int = 0,
+                     engine: str = "batch") -> SearchReport:
     """Algorithm 1.  Returns the best schedule + tuning telemetry.
 
     With a ``mesh``, the search runs over the *localized* chain — each
@@ -88,11 +90,24 @@ def heuristic_search(chain: Chain,
     weights, the epsilon convergence band — a large constant would
     drown the signal in all three) and is added once to the reported
     best_time/history, keeping regime-vs-regime comparisons on eq (2').
+
+    ``engine`` picks the implementation: ``"batch"`` (default) runs the
+    identical algorithm over ``pruning.CandidateMatrix`` array tables —
+    same rng stream, same candidate ordering, bit-identical estimates,
+    so it returns the same best schedule — materializing ``Schedule``
+    objects only for measured candidates and the winner.  ``"scalar"``
+    is the per-Schedule reference implementation (docs/tuning.md).
     """
+    if engine not in ("batch", "scalar"):
+        raise ValueError(f"unknown search engine {engine!r}")
     coll_s = 0.0
     if mesh is not None:
         chain = mesh.localize(chain)
         coll_s = collective_bytes(chain, mesh) / mesh.ici_bw
+    if engine == "batch":
+        return _search_batch(chain, measure_fn, hw, mesh, coll_s,
+                             population_size, topk, epsilon,
+                             max_iterations, unit, seed)
     rng = random.Random(seed)
     stats = PruneStats()
     candidates = generate_candidates(chain, hw=hw, unit=unit, stats=stats)
@@ -153,6 +168,141 @@ def heuristic_search(chain: Chain,
 
     assert best is not None
     return SearchReport(best=best, best_time=best_t + coll_s,
+                        n_measured=n_measured,
+                        n_iterations=it + 1, n_candidates=stats.n_kept,
+                        prune_stats=stats.as_dict(),
+                        history=[(i, t + coll_s) for i, t in history],
+                        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Batched engine: Algorithm 1 over array tables
+# ---------------------------------------------------------------------------
+
+def _mutate_batch(cand: tuple[int, int], cm: CandidateMatrix,
+                  chain: Chain, rng: random.Random, unit: int,
+                  hw: TpuSpec, loops: list[str],
+                  tile_cands: dict[str, list[int]],
+                  rule3_ok: dict[str, set[int]],
+                  vmem_budget: float) -> Optional[tuple[int, int]]:
+    """``_mutate`` on matrix coordinates: identical rng draws and
+    identical accept/reject checks (Rule 3, hard Rule 2, Rule 4), but
+    validity and VMEM come from the pre-priced class tables instead of
+    a fresh ``build_schedule``.  ``tile_cands``/``rule3_ok`` are
+    memoized per search call (they depend only on the chain)."""
+    ci, row = cand
+    cls = cm.classes[ci]
+    for _ in range(8):
+        l = rng.choice(loops)
+        cands = tile_cands[l]
+        if len(cands) <= 1:
+            continue
+        new = rng.choice(cands)
+        if new == cm.tile_at(row, l):
+            continue
+        if new not in rule3_ok[l]:
+            continue
+        row2 = cm.row_with(row, l, new)
+        if not cls.valid[row2]:
+            continue
+        if cls.vmem[row2] > vmem_budget:
+            continue
+        return (ci, row2)
+    return None
+
+
+def _search_batch(chain: Chain, measure_fn: Optional[MeasureFn],
+                  hw: TpuSpec, mesh: Optional[MeshSpec], coll_s: float,
+                  population_size: int, topk: int, epsilon: float,
+                  max_iterations: int, unit: int,
+                  seed: int) -> SearchReport:
+    """Algorithm 1 with candidates as (class, tile-row) coordinates.
+
+    Every rng call, ordering decision, and float comparison mirrors the
+    scalar engine (stable sorts on bit-identical estimates, same
+    mutation draw sequence), so both engines converge to the same
+    ``Schedule.key()`` — the scalar path stays the testable reference
+    while this one is the fast path.
+    """
+    rng = random.Random(seed)
+    stats = PruneStats()
+    cm = generate_candidates_batch(chain, hw=hw, unit=unit, stats=stats)
+    candidates = cm.candidates
+    if not candidates:
+        raise ValueError(f"no viable schedule for chain {chain.name}")
+
+    population = (candidates if len(candidates) <= population_size
+                  else rng.sample(candidates, population_size))
+
+    loops = list(chain.loops)
+    tile_cands = {l: candidate_tile_sizes(chain.loops[l], unit=unit)
+                  for l in loops}
+    rule3_ok = {l: {t for t in tile_cands[l]
+                    if rule3_padding_ok(chain.loops[l], t, unit)}
+                for l in loops}
+    vmem_budget = hw.vmem_slack * hw.vmem_bytes
+
+    best_t = math.inf
+    best: Optional[tuple[int, int]] = None
+    measured_cache: dict[tuple, float] = {}
+    materialized: dict[tuple, Schedule] = {}
+    n_measured = 0
+    history: list[tuple[int, float]] = []
+
+    for it in range(max_iterations):
+        est = [(cm.est_of(c), c) for c in population]
+        est.sort(key=lambda p: p[0])
+        top = [c for _, c in est[:topk]]
+
+        top1_t, top1 = math.inf, None
+        for c in top:
+            k = cm.key(c)
+            if k not in measured_cache:
+                if measure_fn is None:
+                    # analytic measurement: bit-identical to
+                    # estimate(materialize(c), hw), already priced
+                    measured_cache[k] = cm.est_of(c)
+                else:
+                    sched = materialized.get(k)
+                    if sched is None:
+                        sched = cm.materialize(c)
+                        materialized[k] = sched
+                    measured_cache[k] = measure_fn(sched)
+                n_measured += 1
+            if measured_cache[k] < top1_t:
+                top1_t, top1 = measured_cache[k], c
+        history.append((it, min(top1_t, best_t)))
+
+        if best is not None and top1_t >= best_t * (1 - epsilon):
+            if top1_t < best_t:
+                best_t, best = top1_t, top1
+            break  # converged (lines 10-12)
+        if top1_t < best_t:
+            best_t, best = top1_t, top1
+
+        # next population: draw parents weighted by estimated speed
+        weights = [1.0 / max(e, 1e-12) for e, _ in est]
+        parents = rng.choices([c for _, c in est], weights=weights,
+                              k=population_size)
+        nxt: list[tuple[int, int]] = []
+        seen: set[tuple] = set()
+        for p in parents:
+            child = _mutate_batch(p, cm, chain, rng, unit, hw, loops,
+                                  tile_cands, rule3_ok, vmem_budget) or p
+            k = cm.key(child)
+            if k not in seen:
+                seen.add(k)
+                nxt.append(child)
+        # keep elites so the best never regresses
+        for c in top:
+            if cm.key(c) not in seen:
+                nxt.append(c)
+                seen.add(cm.key(c))
+        population = nxt
+
+    assert best is not None
+    best_sched = materialized.get(cm.key(best)) or cm.materialize(best)
+    return SearchReport(best=best_sched, best_time=best_t + coll_s,
                         n_measured=n_measured,
                         n_iterations=it + 1, n_candidates=stats.n_kept,
                         prune_stats=stats.as_dict(),

@@ -122,9 +122,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mf = hlo_analysis.model_flops(cfg, shape, n_dev)
     # MCFuser kernelization: replace XLA's unfusable attention-interior
-    # HBM traffic by the tuned fused-kernel traffic (the paper's win).
+    # HBM traffic by the tuned fused-kernel traffic (the paper's win),
+    # tuned under THIS cell's mesh regime (tuner_mesh_spec) — and cached
+    # on disk (core.schedule_cache), so identical localized chains
+    # across sweep cells tune once.
     attn_kernel_bytes, n_attn = hlo_analysis.kernelized_attention_bytes(
-        cfg, shape, n_dev)
+        cfg, shape, n_dev, mesh=mesh, rules=rules)
     bytes_xla = total.bytes
     if shape.kind == "decode":
         # single-token decode has no fusable attention interior, and the

@@ -138,7 +138,8 @@ def model_flops(cfg, shape, n_devices: int) -> float:
     return total / n_devices
 
 
-def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
+def kernelized_attention_bytes(cfg, shape, n_dev: int, mesh=None,
+                               rules=None) -> tuple[float, int]:
     """Per-device HBM bytes of all attention layers when executed as the
     MCFuser-tuned fused Pallas kernel (score tiles stay in VMEM).
 
@@ -146,6 +147,15 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
     the schedule picked by core.search for this exact (M, N, dh) — the
     tuner decides the production kernel's traffic, the dry-run only
     replaces XLA's unfusable-interior accounting with it.
+
+    With a ``mesh`` (+ the cell's ``dist.sharding.Rules``), the tuning
+    runs under ``launch.mesh.tuner_mesh_spec`` — the same regime
+    ``kernels.ops.attention`` dispatches — so the schedule is picked
+    for the *localized* chain (heads/batch sharded over data + tp axes,
+    which moves alpha and therefore the best tile) and the returned
+    bytes are one shard's traffic.  Meshless (mesh=None) keeps the
+    legacy single-chip accounting: per-instance bytes times the
+    ``batch * heads / n_dev`` head-batch fraction.
 
     Returns (bytes, n_attention_instances).
     """
@@ -158,9 +168,28 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
     s = shape.seq
     passes = 4.0 if shape.kind == "train" else 1.0  # fwd+remat+bwd(~2x)
 
-    def unit_bytes(m, n):
-        tk = api.fuse_attention(m, min(n, 128 * ((n + 127) // 128)), dh,
-                                dh, heads=1, batch=1, dtype=cfg.dtype)
+    spec = None
+    if mesh is not None:
+        from .mesh import tuner_mesh_spec
+        spec = tuner_mesh_spec(mesh, rules, kind="attention",
+                               batch=shape.batch,
+                               feature_dim=cfg.n_kv_heads)
+        if spec.is_single:
+            spec = None
+
+    def layer_bytes(m, n):
+        """Per-device bytes of one attention layer (all its local
+        head-batch instances) for (q_len=m, kv_len=n)."""
+        if spec is None:
+            tk = api.fuse_attention(m, n, dh, dh, heads=1, batch=1,
+                                    dtype=cfg.dtype)
+            hb = shape.batch * cfg.n_heads / n_dev
+            return t_mem(tk.report.best, V5E) * V5E.hbm_bw * hb
+        tk = api.fuse_attention(m, n, dh, dh, heads=cfg.n_heads,
+                                batch=shape.batch, dtype=cfg.dtype,
+                                mesh=spec)
+        # t_mem of the localized chain already spans the shard's whole
+        # head-batch (chain.batch localized by the spec's batch axes)
         return t_mem(tk.report.best, V5E) * V5E.hbm_bw
 
     total = 0.0
@@ -168,10 +197,9 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
     if cfg.family == "encdec":
         t = cfg.encoder.n_frames
         t_pad = 128 * ((t + 127) // 128)
-        hb = shape.batch * cfg.n_heads / n_dev
-        total += unit_bytes(t_pad, t_pad) * hb * cfg.encoder.n_layers
-        total += unit_bytes(s, s) * hb * cfg.n_layers          # dec self
-        total += unit_bytes(s, t_pad) * hb * cfg.n_layers      # cross
+        total += layer_bytes(t_pad, t_pad) * cfg.encoder.n_layers
+        total += layer_bytes(s, s) * cfg.n_layers          # dec self
+        total += layer_bytes(s, t_pad) * cfg.n_layers      # cross
         count = cfg.encoder.n_layers + 2 * cfg.n_layers
     else:
         pat = list(cfg.pattern)
@@ -181,7 +209,6 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int) -> tuple[float, int]:
             return 0.0, 0
         win = cfg.window or (cfg.rglru.local_window if cfg.rglru else 0)
         n_kv = min(s, win) if win else s
-        hb = shape.batch * cfg.n_heads / n_dev
-        total = unit_bytes(s, n_kv) * hb * n_attn
+        total = layer_bytes(s, n_kv) * n_attn
         count = n_attn
     return total * passes, count

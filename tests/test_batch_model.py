@@ -1,0 +1,178 @@
+"""Batched analytical model == scalar reference, candidate matrix ==
+scalar candidate generation, batch search engine == scalar engine.
+
+The batched path (core.batch_model / pruning.generate_candidates_batch
+/ the "batch" search engine) is the tuning hot path; the scalar walk of
+per-Schedule statement lists stays the reference implementation.  These
+tests pin the equivalence the speedup rests on — down to bit-identical
+estimates, identical PruneStats, identical rng-stream search outcomes.
+"""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batch_model import (ExprClassTable, as_tile_matrix,
+                                    estimate_batch, vmem_estimate_batch)
+from repro.core.chain import attention_chain, gemm_chain, gemm_chain3
+from repro.core.dag import build_schedule
+from repro.core.perf_model import (MeshSpec, V5E, estimate, t_mem,
+                                   vmem_estimate)
+from repro.core.pruning import (PruneStats, generate_candidates,
+                                generate_candidates_batch,
+                                iter_tile_assignments)
+from repro.core.search import heuristic_search
+from repro.core.tiling import candidate_tile_sizes, enumerate_tilings
+
+
+def _random_chain(rng: random.Random):
+    fam = rng.choice(["gemm", "attn", "gemm3"])
+    dims = [rng.choice([64, 128, 192, 256, 384, 512]) for _ in range(5)]
+    b = rng.choice([1, 2, 4])
+    dt = rng.choice(["float32", "bfloat16"])
+    if fam == "gemm":
+        return gemm_chain(*dims[:4], batch=b, dtype=dt)
+    if fam == "attn":
+        return attention_chain(*dims[:4], heads=rng.choice([1, 4]),
+                               batch=b, dtype=dt)
+    return gemm_chain3(*dims, batch=b, dtype=dt)
+
+
+def _random_tiles(chain, rng: random.Random):
+    return {n: rng.choice(candidate_tile_sizes(d))
+            for n, d in chain.loops.items()}
+
+
+def _random_mesh(chain, rng: random.Random):
+    if rng.random() < 0.25:
+        return None
+    loop = rng.choice(list(chain.loops))
+    placement = ((loop, "model"),) if rng.random() < 0.7 else ()
+    batch_axes = ("data",) if rng.random() < 0.7 else ()
+    return MeshSpec(axes=(("data", rng.choice([1, 2])),
+                          ("model", rng.choice([1, 2, 4]))),
+                    placement=placement, batch_axes=batch_axes)
+
+
+@given(seed=st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_batch_model_matches_scalar_property(seed):
+    """estimate_batch / vmem_estimate_batch == scalar estimate /
+    vmem_estimate across random chains, expression classes, tile
+    assignments, and meshes."""
+    rng = random.Random(seed)
+    chain = _random_chain(rng)
+    expr = rng.choice(enumerate_tilings(chain))
+    rows = [_random_tiles(chain, rng) for _ in range(6)]
+    mesh = _random_mesh(chain, rng)
+    eb = estimate_batch(chain, expr, rows, V5E, mesh=mesh)
+    vb = vmem_estimate_batch(chain, expr, rows, V5E)
+    for i, ts in enumerate(rows):
+        s = build_schedule(chain, expr, ts)
+        assert estimate(s, V5E, mesh) == pytest.approx(float(eb[i]),
+                                                       rel=1e-9)
+        assert vmem_estimate(s, V5E) == int(vb[i])
+
+
+def test_batch_model_bitwise_exhaustive():
+    """Every (expression, assignment) of two small chains agrees
+    *bitwise* — the batched search's ranking ties can then never
+    diverge from the scalar engine's."""
+    for chain in (gemm_chain(256, 256, 128, 128, dtype="bfloat16"),
+                  attention_chain(384, 384, 64, 64, heads=2)):
+        rows = list(iter_tile_assignments(chain, rule3=False))
+        tiles = as_tile_matrix(chain, rows)
+        for expr in enumerate_tilings(chain):
+            table = ExprClassTable.build(chain, expr)
+            p = table.price(tiles, V5E)
+            est, vmem, valid = p.est, p.vmem, p.valid
+            for i, ts in enumerate(rows):
+                s = build_schedule(chain, expr, ts, hard_rule2=False)
+                assert estimate(s, V5E) == est[i]          # bit-equal
+                assert vmem_estimate(s, V5E) == vmem[i]
+                blown = any(m > 1
+                            for m in s.cached_intermediates.values())
+                assert bool(valid[i]) == (not blown)
+
+
+def test_price_consistent_with_individual_methods():
+    chain = gemm_chain(512, 512, 256, 128, dtype="bfloat16")
+    rows = list(iter_tile_assignments(chain, rule3=True))
+    tiles = as_tile_matrix(chain, rows)
+    for expr in enumerate_tilings(chain)[:8]:
+        table = ExprClassTable.build(chain, expr)
+        p = table.price(tiles, V5E)
+        assert (p.est == table.estimate_batch(tiles, V5E)).all()
+        assert (p.vmem == table.vmem_batch(tiles, V5E)).all()
+        assert (p.valid == table.rule2_valid(tiles)).all()
+        assert (p.est == (p.t_mem + p.t_comp) * p.alpha).all()
+
+
+def test_candidate_matrix_matches_scalar_generation():
+    """Same candidates, same order, same PruneStats as the scalar
+    generate_candidates — Rule 1/2/3/4 as array ops."""
+    for chain in (gemm_chain(512, 512, 256, 256, dtype="bfloat16"),
+                  attention_chain(512, 512, 64, 64, heads=4),
+                  gemm_chain3(256, 256, 128, 128, 256)):
+        s_scalar, s_batch = PruneStats(), PruneStats()
+        cands = generate_candidates(chain, stats=s_scalar)
+        cm = generate_candidates_batch(chain, stats=s_batch)
+        assert s_scalar.as_dict() == s_batch.as_dict()
+        assert ([c.key() for c in cands]
+                == [cm.key(c) for c in cm.candidates])
+        # spot-check materialization round-trips to the same schedule
+        for c, sched in list(zip(cm.candidates, cands))[::7]:
+            m = cm.materialize(c)
+            assert m.key() == sched.key()
+            assert estimate(m, V5E) == cm.est_of(c)
+
+
+def test_candidate_matrix_memoized():
+    chain = gemm_chain(512, 256, 128, 128)
+    s1, s2 = PruneStats(), PruneStats()
+    cm1 = generate_candidates_batch(chain, stats=s1)
+    cm2 = generate_candidates_batch(chain, stats=s2)
+    assert cm1 is cm2                       # structure reused
+    assert s1.as_dict() == s2.as_dict()     # caller stats still filled
+
+
+def test_search_engines_equivalent():
+    """The acceptance bar: the batched engine picks bit-identical best
+    schedules (same Schedule.key()) with identical telemetry."""
+    mesh = MeshSpec(axes=(("data", 2), ("model", 4)),
+                    placement=(("h", "model"),), batch_axes=("data",))
+    cases = [
+        (gemm_chain(512, 256, 64, 64, dtype="bfloat16"), None),
+        (gemm_chain(1024, 1024, 128, 128, batch=4, dtype="bfloat16"),
+         None),
+        (attention_chain(512, 512, 64, 64, heads=8, dtype="bfloat16"),
+         None),
+        (gemm_chain(1024, 1024, 256, 256), mesh),
+    ]
+    for chain, m in cases:
+        rb = heuristic_search(chain, mesh=m, seed=0, engine="batch")
+        rs = heuristic_search(chain, mesh=m, seed=0, engine="scalar")
+        assert rb.best.key() == rs.best.key()
+        assert rb.best_time == rs.best_time
+        assert rb.n_measured == rs.n_measured
+        assert rb.n_iterations == rs.n_iterations
+        assert rb.history == rs.history
+        assert rb.prune_stats == rs.prune_stats
+
+
+def test_search_engines_equivalent_custom_measure_fn():
+    """Schedules ARE materialized for measured candidates when a real
+    measure_fn needs them — and both engines agree through it."""
+    chain = gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    fn = lambda s: t_mem(s, V5E) * 1.25  # noqa: E731
+    rb = heuristic_search(chain, measure_fn=fn, seed=1, engine="batch")
+    rs = heuristic_search(chain, measure_fn=fn, seed=1, engine="scalar")
+    assert rb.best.key() == rs.best.key()
+    assert rb.best_time == rs.best_time
+    assert rb.n_measured == rs.n_measured
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        heuristic_search(gemm_chain(256, 256, 64, 64), engine="warp")

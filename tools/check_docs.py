@@ -11,6 +11,12 @@ Catches the failure mode PR 2 inherited: eight modules citing a
    ``docs/<name>.md`` paths (resolved from the repo root) and bare
    ``UPPERCASE.md`` citations like ``DESIGN.md`` (resolved from the
    repo root) — must exist.
+3. Every ``core/batch_model.py``-style module citation in checked
+   ``.md`` files must resolve — at the repo root, under ``src/`` or
+   under ``src/repro/`` (docs conventionally drop the package prefix).
+4. Every committed-artifact citation (``BENCH_<name>.json``, e.g. the
+   perf-trajectory files ``benchmarks/run.py`` writes) must exist at
+   the repo root.
 
 Checked: ``src/``, ``tests/``, ``benchmarks/``, ``examples/``,
 ``tools/``, ``docs/``, ``README.md``, ``ROADMAP.md``.  Driver-owned /
@@ -31,6 +37,11 @@ CHECKED_ROOT_FILES = ("README.md", "ROADMAP.md")
 _MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _DOC_PATH = re.compile(r"\bdocs/[\w.\-/]+\.md\b")
 _BARE_CITE = re.compile(r"\b[A-Z][A-Z_]*\.md\b")
+_MODULE_CITE = re.compile(
+    r"\b((?:src/)?(?:repro/)?"
+    r"(?:core|kernels|models|dist|launch|configs|ckpt|runtime|optim|"
+    r"data|tests|tools|benchmarks|examples)/[\w./]*\.py)\b")
+_ARTIFACT_CITE = re.compile(r"\bBENCH_\w+\.json\b")
 
 
 def _checked_files(root: Path) -> list[Path]:
@@ -66,6 +77,18 @@ def check(root: Path) -> list[str]:
         for m in _BARE_CITE.finditer(text):
             if not (root / m.group(0)).exists():
                 errors.append(f"{rel}: citation of missing {m.group(0)}")
+
+        if path.suffix == ".md":
+            for m in _MODULE_CITE.finditer(text):
+                mod = m.group(1)
+                if not any((root / pre / mod).exists()
+                           for pre in ("", "src", "src/repro")):
+                    errors.append(
+                        f"{rel}: citation of missing module {mod}")
+            for m in _ARTIFACT_CITE.finditer(text):
+                if not (root / m.group(0)).exists():
+                    errors.append(
+                        f"{rel}: citation of missing artifact {m.group(0)}")
     return sorted(set(errors))
 
 
