@@ -7,6 +7,14 @@ Baselines mirrored from the paper:
   * MCFuser: tuned (bq, bkv) from the analytical search
 
 Correctness: the tuned interpret-mode kernel vs the jnp oracle.
+
+Beyond the paper's table, the long-context section records the
+**regime crossover** (docs/design.md §7): shapes whose kv sequence
+outgrows what batch x heads sharding can cover on an 8-way mesh, where
+``api.fuse_attention_regimes`` should cross over from the spatial to
+the ring (kv-sharded, partial-softmax combine) regime.  Rows are
+regime-labelled and land in BENCH_kernels.json so the committed
+trajectory records where the crossover sits.
 """
 import time
 
@@ -16,11 +24,43 @@ import numpy as np
 from repro.core import api
 from repro.core.chain import attention_chain, single_gemm
 from repro.core.search import heuristic_search
-from repro.core.perf_model import V5E, estimate
+from repro.core.perf_model import V5E, estimate, t_mem
 from repro.kernels.attention import fused_attention
 from repro.kernels.ref import gqa_attention_ref
+from repro.kernels import ops
 
-from .workloads import ATTENTION
+from .workloads import (ATTENTION, RING_ATTENTION, RING_MESH_AXIS,
+                        ring_sweep_setup)
+
+
+def regime_rows() -> list[dict]:
+    """Spatial-vs-ring regime search per long-context workload on an
+    8-way model axis, via the exact decision path ``kernels.ops``
+    dispatches."""
+    mesh, rules = ring_sweep_setup()
+    rows = []
+    for name, (heads, m, n, k, h) in RING_ATTENTION.items():
+        choice, plan = ops.attention_regime_choice(
+            rules, mesh, batch=1, q_heads=heads, kv_heads=heads,
+            q_len=m, kv_len=n, head_dim=k, v_dim=h, dtype="bfloat16",
+            causal=True, interpret=True)
+        assert choice is not None, f"{name}: no ring candidate"
+        tks = choice.kernels
+        rows.append({
+            "name": name, "heads": heads, "m": m, "n": n,
+            "n_shards": RING_MESH_AXIS,
+            "regime": choice.regime,
+            "us_spatial": choice.times["spatial"] * 1e6,
+            "us_ring": choice.times["ring"] * 1e6,
+            "ring_speedup": choice.times["spatial"] / choice.times["ring"],
+            # per-device HBM traffic of each regime's tuned schedule
+            # (model t_mem; the ring one is the shard-local chain)
+            "hbm_bytes_spatial": t_mem(tks["spatial"].report.best, V5E)
+            * V5E.hbm_bw,
+            "hbm_bytes_ring": t_mem(tks["ring"].report.best, V5E)
+            * V5E.hbm_bw,
+        })
+    return rows
 
 
 def unfused_time(heads, m, n, k, h, hw=V5E) -> float:
@@ -82,7 +122,17 @@ def main():
               f"vs_unfused={r['speedup_vs_unfused']:.2f}x "
               f"vs_flash128={r['speedup_vs_flash']:.2f}x "
               f"blocks=({r['bq']},{r['bkv']}) err={r['max_abs_err']:.2e}")
-    return rows
+    reg = regime_rows()
+    for r in reg:
+        print(f"attn_regime_{r['name']},"
+              f"{min(r['us_spatial'], r['us_ring']):.2f},"
+              f"regime={r['regime']} "
+              f"spatial={r['us_spatial']:.2f}us "
+              f"ring={r['us_ring']:.2f}us "
+              f"ring_speedup={r['ring_speedup']:.2f}x "
+              f"hbm_ring/spatial="
+              f"{r['hbm_bytes_ring'] / r['hbm_bytes_spatial']:.3f}")
+    return rows + reg
 
 
 if __name__ == "__main__":

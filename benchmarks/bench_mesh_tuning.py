@@ -13,15 +13,25 @@ report what moved (docs/tuning.md worked example, generalized):
 `changed` marks workloads where the mesh regime picks a different
 schedule (tile sizes or class) than the single-chip tuner — the
 reason the mesh must be visible to the search, not applied after it.
+
+The attention section sweeps the *dispatchable* regime pair — spatial
+vs ring (kv-sharded partial-softmax, ``dist/ring_dispatch.py``) — via
+``api.fuse_attention_regimes`` on an 8-way model axis, over the paper's
+short-context modules and long-context shapes where the crossover
+flips.  ``--smoke`` is the CI lane: asserts the regime search prices
+both regimes and lands on ring for long contexts, spatial for short.
 """
+import sys
 import time
 
 from repro.core.chain import gemm_chain
 from repro.core.perf_model import (MeshSpec, V5E, alpha, estimate, t_comp,
                                    t_mem, t_coll)
 from repro.core.search import heuristic_search
+from repro.kernels import ops
 
-from .workloads import GEMM_CHAINS
+from .workloads import (ATTENTION, GEMM_CHAINS, RING_ATTENTION,
+                        ring_sweep_setup)
 
 REGIMES = {
     "single": lambda: None,
@@ -66,6 +76,69 @@ def run() -> list[dict]:
     return rows
 
 
+# Attention regime sweep: paper modules (short kv) + the shared
+# long-context crossover shapes, on an 8-way model axis.
+ATTN_SWEEP = {
+    "S1": ATTENTION["S1"][:5],
+    "S4": ATTENTION["S4"][:5],
+    "long_8k": RING_ATTENTION["L1_tail_8k"],
+    "long_32k": RING_ATTENTION["L2_tail_32k"],
+}
+
+
+def run_attention() -> list[dict]:
+    mesh, rules = ring_sweep_setup()
+    rows = []
+    for name, (heads, m, n, k, h) in ATTN_SWEEP.items():
+        choice, _ = ops.attention_regime_choice(
+            rules, mesh, batch=1, q_heads=heads, kv_heads=heads,
+            q_len=m, kv_len=n, head_dim=k, v_dim=h, dtype="bfloat16",
+            causal=True, interpret=True)
+        assert choice is not None, f"{name}: kv not divisible by axis"
+        ring_rep = choice.kernels["ring"].report
+        rows.append({
+            "name": name, "regime": choice.regime,
+            "t_spatial": choice.times["spatial"],
+            "t_ring": choice.times["ring"],
+            "t_coll_ring": t_coll(ring_rep.best, ring_rep.mesh),
+        })
+    return rows
+
+
+def smoke() -> int:
+    """CI lane (benchmarks/run.py --smoke): the regime search must
+    price both regimes and flip at the right scale."""
+    failures = []
+    for r in run_attention():
+        if r["t_coll_ring"] <= 0.0:
+            failures.append(f"{r['name']}: ring regime priced no "
+                            "collective term")
+        want = "ring" if r["name"].startswith("long") else "spatial"
+        if r["regime"] != want:
+            failures.append(f"{r['name']}: picked {r['regime']}, "
+                            f"expected {want} "
+                            f"(spatial={r['t_spatial']:.2e}s "
+                            f"ring={r['t_ring']:.2e}s)")
+        print(f"smoke regime {r['name']}: {r['regime']} "
+              f"spatial={r['t_spatial']*1e6:.1f}us "
+              f"ring={r['t_ring']*1e6:.1f}us")
+    # gemm ring regime: the collective term must steer the tuner away
+    # at paper scale (docs/tuning.md worked example)
+    b, m, n, k, h = GEMM_CHAINS["G10"]
+    ch = gemm_chain(m, n, k, h, batch=b, dtype="bfloat16")
+    rep_single = heuristic_search(ch, seed=0)
+    rep_ring = heuristic_search(ch, mesh=REGIMES["ring4"](), seed=0)
+    if rep_ring.best_time <= rep_single.best_time:
+        failures.append("G10: ring-sharded GEMM reduction priced "
+                        "cheaper than single chip — collective term "
+                        "missing?")
+    for f in failures:
+        print(f"SMOKE FAIL: {f}", file=sys.stderr)
+    print(f"mesh-tuning smoke: {'FAIL' if failures else 'OK'}",
+          file=sys.stderr)
+    return 1 if failures else 0
+
+
 def main():
     print("name,us_per_call,derived")
     for r in run():
@@ -75,7 +148,20 @@ def main():
               f"tiles=m{ts['m']}/n{ts['n']}/k{ts['k']}/h{ts['h']} "
               f"t_coll_us={r['t_coll']*1e6:.2f} "
               f"changed={'yes' if r['changed'] else 'no'}")
+    for r in run_attention():
+        print(f"mesh_regime_{r['name']},"
+              f"{min(r['t_spatial'], r['t_ring'])*1e6:.2f},"
+              f"regime={r['regime']} "
+              f"spatial={r['t_spatial']*1e6:.2f}us "
+              f"ring={r['t_ring']*1e6:.2f}us "
+              f"t_coll_ring={r['t_coll_ring']*1e6:.2f}us")
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI assertions: regimes priced + crossover")
+    if ap.parse_args().smoke:
+        sys.exit(smoke())
     main()

@@ -36,7 +36,19 @@ def main(argv=None) -> None:
     ap.add_argument("--json-dir", default=str(REPO_ROOT),
                     help="where BENCH_*.json land (default: repo root)")
     ap.add_argument("--no-json", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: asserting subset only — tuning-time "
+                         "budgets/engine parity (bench_tuning_time) plus "
+                         "the mesh regime sweep incl. the ring-attention "
+                         "crossover (bench_mesh_tuning); writes no JSON")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        from . import bench_mesh_tuning, bench_tuning_time
+        with isolated_schedule_cache():
+            rc = bench_tuning_time.smoke()
+            rc = bench_mesh_tuning.smoke() or rc
+        sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,
                    bench_gemm_chain, bench_mesh_tuning,

@@ -29,6 +29,33 @@ ATTENTION = {
     "S9": (1, 1024, 512, 64, 64, "MLP-Mixer"),
 }
 
+# Long-context attention shapes for the spatial-vs-ring regime sweep
+# (heads, M, N, K, H): few heads — unable to cover an 8-way mesh
+# spatially — with the kv length sweeping past the crossover; the
+# "_ctrl" row is a short-context control where the collective-free
+# regime must keep winning.  Shared by bench_attention (the committed
+# BENCH_kernels.json crossover rows) and bench_mesh_tuning (the CI
+# smoke asserts) so the two can never diverge.
+RING_ATTENTION = {
+    "L1_tail_8k": (4, 128, 8192, 64, 64),
+    "L2_tail_32k": (4, 128, 32768, 64, 64),
+    "L3_prefill_16k": (4, 1024, 16384, 64, 64),
+    "L4_short_ctrl": (4, 256, 512, 64, 64),
+}
+RING_MESH_AXIS = 8
+
+
+def ring_sweep_setup():
+    """(mesh, rules) for the 8-way regime sweep — a stub mesh suffices:
+    the spec builders only read ``mesh.shape``."""
+    from types import SimpleNamespace
+
+    from repro.dist.sharding import Rules
+
+    return (SimpleNamespace(shape={"model": RING_MESH_AXIS}),
+            Rules(model="model", tp="model"))
+
+
 # Fig 9: end-to-end BERT models (L, d_model, heads, d_ff, seq)
 BERT = {
     "Bert-Small": (4, 512, 8, 2048, 512),

@@ -3,17 +3,23 @@ any assigned architecture (smoke-sized on CPU; identical code drives
 the TPU mesh).
 
     PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+
+Sharded (regime-aware) serving — threads ``mesh=``/``rules=`` into the
+model's attention calls instead of silently using the unsharded path,
+and prints the tuner's spatial-vs-ring regime choice for this job's
+attention shapes (docs/design.md §7):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_batched.py --shard-model 4
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import ALIASES, ARCHS, get_config
-from repro.launch.serve import generate
+from repro.launch.serve import demo_side_inputs, run_generate, sharded_runtime
 from repro.launch.steps import build_model
-from repro.models.lm import Runtime
 
 
 def main():
@@ -23,32 +29,28 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--shard-model", type=int, default=1,
+                    help="model-axis size; > 1 serves over a host mesh "
+                         "(force host devices via XLA_FLAGS first)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
-    model = build_model(cfg, Runtime(remat=False))
+    mesh, rules, rt = sharded_runtime(args.shard_model)
+    model = build_model(cfg, rt)
     params = model.init_params(jax.random.PRNGKey(0))
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    kwargs = {}
-    if cfg.family == "encdec":
-        kwargs["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.encoder.n_frames, cfg.d_model))
-    if cfg.n_prefix_embeds:
-        kwargs["prefix_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.n_prefix_embeds, cfg.d_model))
-
-    t0 = time.perf_counter()
-    tokens = generate(model, params, prompts, args.gen, **kwargs)
-    dt = time.perf_counter() - t0
+    kwargs, extra = demo_side_inputs(cfg, args.batch)
+    tokens, dt = run_generate(cfg, model, params, prompts, args.gen,
+                              mesh=mesh, rules=rules, extra=extra,
+                              **kwargs)
     assert tokens.shape == (args.batch, args.gen)
     assert np.all(tokens >= 0) and np.all(tokens < cfg.vocab)
+    shard = f" [model-sharded x{args.shard_model}]" if mesh is not None else ""
     print(f"{cfg.name}: generated {tokens.shape[1]} tokens x "
           f"{tokens.shape[0]} requests in {dt:.2f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s)")
-    print("request 0:", tokens[0][:12].tolist(), "...")
+          f"({args.batch*args.gen/dt:.1f} tok/s){shard}")
+    print("request 0:", tokens[0][:12].tolist())
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ from . import codegen, schedule_cache
 from .chain import Chain, attention_chain, gemm_chain
 from .dag import build_schedule
 from .perf_model import MeshSpec, TpuSpec, V5E
-from .search import SearchReport, heuristic_search
+from .search import SearchReport, heuristic_search, rank_regimes
 
 _CACHE: dict[tuple, "TunedKernel"] = {}
 
@@ -55,16 +55,23 @@ def _is_tpu() -> bool:
 
 def _tune_or_load(kind: str, chain: Chain, hw: TpuSpec,
                   mesh: Optional[MeshSpec], unit: int, seed: int,
-                  disk_key: tuple):
+                  disk_key: tuple, measure_fn=None):
     """(report, params, seconds, source): disk-cache hit or full search.
 
     A hit rebuilds the winning Schedule through ``build_schedule`` and
     re-derives the kernel params, cross-checking them against the
     stored kwargs — a corrupt or semantically stale entry falls back to
     tuning instead of dispatching a bad kernel.
+
+    With a ``measure_fn`` (real-hardware wall-clock trials) the search
+    outcome persists under the ``"measured"`` trial kind — a separate
+    disk population from the default ``"analytic"`` one, so the two can
+    never satisfy each other's lookups (measured entries embed hardware
+    truth; analytic entries must not masquerade as it).
     """
+    trial = "measured" if measure_fn is not None else "analytic"
     t0 = time.perf_counter()
-    rec = schedule_cache.load(disk_key, hw)
+    rec = schedule_cache.load(disk_key, hw, trial)
     if rec is not None:
         local = mesh.localize(chain) if mesh is not None else chain
         try:
@@ -84,8 +91,8 @@ def _tune_or_load(kind: str, chain: Chain, hw: TpuSpec,
                 history=rec["history"], mesh=mesh)
             return report, params, time.perf_counter() - t0, "disk"
 
-    report = heuristic_search(chain, hw=hw, mesh=mesh, unit=unit,
-                              seed=seed)
+    report = heuristic_search(chain, measure_fn=measure_fn, hw=hw,
+                              mesh=mesh, unit=unit, seed=seed)
     params = codegen.params_for(kind, report.best)
     dt = time.perf_counter() - t0
     schedule_cache.store(
@@ -93,7 +100,7 @@ def _tune_or_load(kind: str, chain: Chain, hw: TpuSpec,
         tile_sizes=report.best.tile_sizes, best_time=report.best_time,
         n_measured=report.n_measured, n_iterations=report.n_iterations,
         n_candidates=report.n_candidates, prune_stats=report.prune_stats,
-        history=report.history, params=params.as_kwargs())
+        history=report.history, params=params.as_kwargs(), trial=trial)
     return report, params, dt, "search"
 
 
@@ -101,23 +108,28 @@ def fuse_gemm_chain(M: int, N: int, K: int, H: int, batch: int = 1,
                     dtype: str = "float32", hw: TpuSpec = V5E,
                     mesh: Optional[MeshSpec] = None,
                     interpret: Optional[bool] = None,
-                    unit: int = 128, seed: int = 0) -> TunedKernel:
+                    unit: int = 128, seed: int = 0,
+                    measure_fn=None) -> TunedKernel:
     """Tune and build the fused 2-GEMM-chain kernel E = (A@B)@D.
 
     (M, N, K, H, batch) are the GLOBAL problem dims; with a ``mesh`` the
     search localizes them and the returned kernel is parametrized for
     one shard's block (dispatch it under shard_map — ``kernels.ops``
-    does this wiring)."""
+    does this wiring).  ``measure_fn`` enables wall-clock trials (real
+    TPU); its outcome caches under the distinct "measured" trial kind.
+    """
     interp = (not _is_tpu()) if interpret is None else interpret
+    trial = "measured" if measure_fn is not None else "analytic"
     key = ("gemm", M, N, K, H, batch, dtype, hw.name, unit, mesh, interp,
-           seed)
+           seed, trial)
     if key in _CACHE:
         return _CACHE[key]
     chain = gemm_chain(M, N, K, H, batch=batch, dtype=dtype)
     disk_key = ("gemm", M, N, K, H, batch, dtype, hw.name, unit,
                 mesh.canonical() if mesh is not None else None, seed)
     report, params, dt, source = _tune_or_load(
-        "gemm", chain, hw, mesh, unit, seed, disk_key)
+        "gemm", chain, hw, mesh, unit, seed, disk_key,
+        measure_fn=measure_fn)
 
     from ..kernels.gemm_chain import fused_gemm_chain as kernel
 
@@ -133,15 +145,20 @@ def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
                    scale: Optional[float] = None,
                    hw: TpuSpec = V5E, mesh: Optional[MeshSpec] = None,
                    interpret: Optional[bool] = None,
-                   unit: int = 128, seed: int = 0) -> TunedKernel:
+                   unit: int = 128, seed: int = 0,
+                   measure_fn=None) -> TunedKernel:
     """Tune and build the fused attention kernel for (M, N, K, H).
 
     As with ``fuse_gemm_chain``, dims are global; a ``mesh`` tunes the
     per-shard block (heads/batch fold into the chain batch, so head and
-    batch sharding enter through ``mesh.batch_axes``)."""
+    batch sharding enter through ``mesh.batch_axes`` — or, for the ring
+    regime, the kv loop ``n`` enters through ``mesh.placement`` and the
+    collective term prices the log-sum-exp combine).  ``measure_fn``
+    enables wall-clock trials; see ``fuse_gemm_chain``."""
     interp = (not _is_tpu()) if interpret is None else interpret
+    trial = "measured" if measure_fn is not None else "analytic"
     key = ("attn", M, N, K, H, heads, batch, dtype, causal, window,
-           scale, hw.name, unit, mesh, interp, seed)
+           scale, hw.name, unit, mesh, interp, seed, trial)
     if key in _CACHE:
         return _CACHE[key]
     chain = attention_chain(M, N, K, H, heads=heads, batch=batch,
@@ -150,7 +167,8 @@ def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
                 scale, hw.name, unit,
                 mesh.canonical() if mesh is not None else None, seed)
     report, params, dt, source = _tune_or_load(
-        "attn", chain, hw, mesh, unit, seed, disk_key)
+        "attn", chain, hw, mesh, unit, seed, disk_key,
+        measure_fn=measure_fn)
 
     from ..kernels.attention import fused_attention as kernel
 
@@ -159,6 +177,60 @@ def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
     tk = TunedKernel(fn, report, params, dt, source=source)
     _CACHE[key] = tk
     return tk
+
+
+@dataclass
+class RegimeChoice:
+    """Outcome of attention regime search: which parallelism regime the
+    model ranks fastest for one global shape, plus every per-regime
+    tuned kernel (all cached — losing regimes cost nothing to revisit
+    when the shape recurs under a different mesh)."""
+
+    regime: str
+    kernel: TunedKernel
+    times: dict[str, float]            # eq (2') best_time per regime
+    kernels: dict[str, TunedKernel]
+
+
+def fuse_attention_regimes(M: int, N: int, K: int, H: int, *,
+                           heads: int = 1, batch: int = 1,
+                           dtype: str = "float32", causal: bool = False,
+                           window: int = 0, scale: Optional[float] = None,
+                           hw: TpuSpec = V5E,
+                           regimes: dict[str, Optional[MeshSpec]],
+                           interpret: Optional[bool] = None,
+                           unit: int = 128, seed: int = 0) -> RegimeChoice:
+    """Regime search (docs/design.md §7): tune the attention chain once
+    per candidate ``MeshSpec`` and return the regime eq (2') ranks
+    fastest.
+
+    ``regimes`` maps a regime name to the MeshSpec the kernel would be
+    dispatched under (``None`` = replicated single-device execution —
+    still a regime, and the honest baseline when neither heads nor
+    batch can cover the mesh).  Each tuning run goes through
+    ``fuse_attention`` and therefore lands in both cache levels under
+    its own ``MeshSpec.canonical()`` key; the cross-regime comparison
+    is ``search.rank_regimes`` on the reported best times, which
+    include the collective term — so the reduction-sharded (ring)
+    regime only wins when its localized tile time plus the log-sum-exp
+    combine's all-reduce beats the spatial regime's shard time.  List
+    the collective-free regime first: ties break conservatively to it.
+    """
+    if not regimes:
+        raise ValueError("regime search needs at least one candidate")
+    kernels = {
+        name: fuse_attention(M, N, K, H, heads=heads, batch=batch,
+                             dtype=dtype, causal=causal, window=window,
+                             scale=scale, hw=hw, mesh=spec,
+                             interpret=interpret, unit=unit, seed=seed)
+        for name, spec in regimes.items()
+    }
+    order = rank_regimes({n: tk.report for n, tk in kernels.items()})
+    best = order[0]
+    return RegimeChoice(
+        regime=best, kernel=kernels[best],
+        times={n: tk.report.best_time for n, tk in kernels.items()},
+        kernels=kernels)
 
 
 def clear_cache(disk: bool = False) -> None:

@@ -22,6 +22,15 @@ analytical model's semantics), and the hardware spec's constants, so
 bumping any of them orphans old entries rather than misreading them.
 Corrupt or truncated files are treated as misses (the tuner simply
 runs).  Set ``REPRO_SCHEDULE_CACHE=0`` to disable persistence entirely.
+
+Entries also carry a **trial kind** — ``"analytic"`` (the search was
+ranked and measured by the model alone, this container's default) or
+``"measured"`` (top-k candidates were wall-clocked through a real
+``measure_fn``, the on-TPU path).  The kind is a distinct component of
+the entry path *and* is cross-checked in the payload, so an analytic
+outcome can never satisfy a measured lookup or vice versa: measured
+trials embed hardware truth the model cannot reproduce, and analytic
+entries must not masquerade as it (ROADMAP follow-up from PR 3).
 """
 from __future__ import annotations
 
@@ -38,7 +47,11 @@ from .perf_model import MODEL_VERSION, TpuSpec
 from .tiling import Loop, Scope
 
 # Payload layout version: bump when the JSON record's fields change.
-SCHEMA_VERSION = 1
+# v2: records carry a "trial" kind ("analytic" | "measured") that is
+# also a key component — the two populations can never collide.
+SCHEMA_VERSION = 2
+
+TRIAL_KINDS = ("analytic", "measured")
 
 _ENV_DIR = "REPRO_CACHE_DIR"
 _ENV_ENABLE = "REPRO_SCHEDULE_CACHE"
@@ -82,14 +95,19 @@ def expr_from_json(data: list) -> Scope:
 # Load / store
 # ---------------------------------------------------------------------------
 
-def entry_path(key: tuple, hw: TpuSpec) -> Path:
-    blob = json.dumps([list(key), model_fingerprint(hw)], sort_keys=True,
-                      default=str)
+def entry_path(key: tuple, hw: TpuSpec, trial: str = "analytic") -> Path:
+    if trial not in TRIAL_KINDS:
+        raise ValueError(f"unknown trial kind {trial!r}; "
+                         f"expected one of {TRIAL_KINDS}")
+    blob = json.dumps([list(key), model_fingerprint(hw), trial],
+                      sort_keys=True, default=str)
     return cache_dir() / (sha256(blob.encode()).hexdigest()[:32] + ".json")
 
 
-def load(key: tuple, hw: TpuSpec) -> Optional[dict]:
-    """The persisted record for ``key``, or None on miss/corruption.
+def load(key: tuple, hw: TpuSpec,
+         trial: str = "analytic") -> Optional[dict]:
+    """The persisted record for ``(key, trial)``, or None on
+    miss/corruption — an entry of the other trial kind is a miss.
 
     Returns a dict with ``expr`` (Scope), ``tile_sizes``
     (dict[str, int]), ``best_time``, ``n_measured``, ``n_iterations``,
@@ -97,7 +115,7 @@ def load(key: tuple, hw: TpuSpec) -> Optional[dict]:
     """
     if not enabled():
         return None
-    path = entry_path(key, hw)
+    path = entry_path(key, hw, trial)
     try:
         with open(path, encoding="utf-8") as f:
             rec = json.load(f)
@@ -105,6 +123,8 @@ def load(key: tuple, hw: TpuSpec) -> Optional[dict]:
             return None
         if rec["key"] != _jsonable_key(key):
             return None  # hash collision paranoia
+        if rec["trial"] != trial:
+            return None  # kind mismatch paranoia (path already splits)
         return {
             "expr": expr_from_json(rec["expr"]),
             "tile_sizes": {str(k): int(v)
@@ -132,7 +152,8 @@ def _jsonable_key(key: tuple) -> list:
 def store(key: tuple, hw: TpuSpec, *, expr: Scope,
           tile_sizes: dict[str, int], best_time: float, n_measured: int,
           n_iterations: int, n_candidates: int, prune_stats: dict,
-          history: list, params: dict) -> Optional[Path]:
+          history: list, params: dict,
+          trial: str = "analytic") -> Optional[Path]:
     """Persist one search outcome; best-effort (failures are silent —
     a read-only filesystem must not break tuning)."""
     if not enabled():
@@ -140,6 +161,7 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
     rec = {
         "schema": SCHEMA_VERSION,
         "model_fingerprint": model_fingerprint(hw),
+        "trial": trial,
         "key": _jsonable_key(key),
         "expr": expr_to_json(expr),
         "tile_sizes": {k: int(v) for k, v in tile_sizes.items()},
@@ -151,7 +173,7 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
         "history": [[int(i), float(t)] for i, t in history],
         "params": params,
     }
-    path = entry_path(key, hw)
+    path = entry_path(key, hw, trial)
     try:
         path.parent.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")

@@ -43,6 +43,21 @@ class SearchReport:
     mesh: Optional[MeshSpec] = None   # regime the schedule was tuned for
 
 
+def rank_regimes(reports: dict[str, "SearchReport"]) -> list[str]:
+    """Regime names cheapest-first by eq (2') ``best_time``.
+
+    ``best_time`` already folds the collective term in (see
+    ``heuristic_search``: it is kept out of the intra-regime search
+    dynamics and added once to the report), so ranking reports tuned
+    under different ``MeshSpec`` regimes compares like with like —
+    per-shard tile time plus whatever each regime pays on the wire.
+    ``sorted`` is stable, so ties break to the caller's insertion
+    order; callers list the collective-free regime first to make the
+    tie-break conservative.
+    """
+    return sorted(reports, key=lambda name: reports[name].best_time)
+
+
 def _mutate(sched: Schedule, chain: Chain, rng: random.Random,
             unit: int, hw: TpuSpec) -> Optional[Schedule]:
     """Mutate one loop's tile size (Algorithm 1 line 17)."""

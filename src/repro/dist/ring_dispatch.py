@@ -1,0 +1,147 @@
+"""Ring (kv-sequence-sharded) attention dispatch (docs/design.md §7).
+
+The spatial dispatch in ``kernels.ops`` shards attention over batch and
+heads — collective-free, but useless when ``batch x kv_heads`` cannot
+cover the mesh or when one shard's HBM cannot hold the kv sequence.
+This module executes the regime the analytical model has priced since
+PR 2 (``tuner_mesh_spec(shard_reduction=True)``): split the kv axis —
+the chain's cross-op *reduction* loop — across the tp-or-model axis,
+run the partial-softmax fused kernel per shard
+(``kernels.attention.fused_attention_partial``), and combine the
+per-shard ``(o_unnormalized, running_max, running_sum)`` triples with
+the associative log-sum-exp merge (FlashDecoding-style; the same wire
+pattern as ``models.layers.distributed_decode_attention``).
+
+The combine's executed collectives are exactly what
+``core.perf_model.collective_bytes`` prices: one all-reduce of the
+shard-local output (``num``) plus all-reduces of the two f32 per-row
+statistics (``pmax`` of the max, ``psum`` of the rescaled sum) — both
+sides evaluate ``core.ring.ring_traffic_bytes`` on the same buffers,
+asserted against the compiled HLO in ``tests/test_ring_attention.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import _compat
+from .sharding import Rules, ring_dispatch_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class RingPlan:
+    """One viable ring dispatch: where the kv axis splits and the
+    MeshSpec the tuner prices it under."""
+
+    spec: object                  # core.perf_model.MeshSpec
+    batch_axes: tuple[str, ...]
+    axis: str                     # mesh axis carrying the kv split
+    n_shards: int
+
+
+def plan_ring_attention(rules: Rules, mesh: jax.sharding.Mesh, *,
+                        batch: int, kv_len: int,
+                        feature_dims: tuple[int, ...] = ()
+                        ) -> Optional[RingPlan]:
+    """The ring regime for this mesh, or None when no mesh axis can
+    split ``kv_len`` evenly (then only the spatial regime exists)."""
+    spec, baxes, ax = ring_dispatch_spec(rules, mesh, batch=batch,
+                                         kv_len=kv_len,
+                                         feature_dims=feature_dims)
+    if ax is None:
+        return None
+    return RingPlan(spec=spec, batch_axes=baxes, axis=ax,
+                    n_shards=mesh.shape[ax])
+
+
+# ---------------------------------------------------------------------------
+# log-sum-exp combine — pure functions, shared by the shard_map body,
+# the host-level tests, and any future pipelined (true ring-pass) variant
+# ---------------------------------------------------------------------------
+
+def merge_partials(a, b):
+    """Associative merge of two partial-softmax states.
+
+    Each state is ``(o_unnorm, m, l)`` as emitted by
+    ``fused_attention_partial`` (stat arrays broadcastable against
+    ``o_unnorm``'s leading dims).  Commutative and associative — shard
+    order cannot change the result beyond f32 rounding — with identity
+    ``(0, -inf, 0)``, which is what fully-masked shards emit."""
+    oa, ma, la = a
+    ob, mb, lb = b
+    m = jnp.maximum(ma, mb)
+    ca = jnp.exp(ma - m)
+    cb = jnp.exp(mb - m)
+    return oa * ca + ob * cb, m, la * ca + lb * cb
+
+
+def finalize_partials(o, l, dtype) -> jax.Array:
+    """Normalize a (fully merged) partial state into the attention
+    output; rows masked everywhere (l == 0) come out as zeros, matching
+    the fused kernel's fully-masked-row convention."""
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (o / l).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   mesh: jax.sharding.Mesh, axis: str,
+                   batch_axes: tuple[str, ...] = (),
+                   causal: bool = False, window: int = 0,
+                   scale: Optional[float] = None,
+                   bq: int = 128, bkv: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """softmax(QK^T)V with kv sharded along ``axis``; output replicated
+    over that axis (sharded over ``batch_axes`` like the inputs).
+
+    q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv); N % mesh.shape[axis] == 0
+    (callers gate via ``plan_ring_attention``).  ``bq``/``bkv`` are the
+    tuned block sizes of the *local* sub-problem (the tuner localized
+    the chain under the same MeshSpec this dispatch runs).
+
+    Queries sit at the tail of the global kv sequence
+    (decode-compatible, as in ``fused_attention``); each shard masks
+    against global positions, so causal/window boundaries falling
+    inside a shard are exact.
+    """
+    from ..kernels.attention import fused_attention_partial
+
+    b, hq, m, d = q.shape
+    n = k.shape[2]
+    n_shards = mesh.shape[axis]
+    assert n % n_shards == 0, (n, n_shards)
+    n_loc = n // n_shards
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    row_start = n - m
+    bspec = batch_axes if batch_axes else None
+    qs = P(bspec, None, None, None)
+    kvs = P(bspec, None, axis, None)
+
+    def body(ql, kl, vl):
+        shard = jax.lax.axis_index(axis)
+        kv_pos = shard * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+        o, mm, ll = fused_attention_partial(
+            ql, kl, vl, kv_pos, bq=bq, bkv=bkv, causal=causal,
+            window=window, scale=scale, row_start=row_start,
+            interpret=interpret)
+        mm = mm[..., 0]                       # (B, Hq, M) f32
+        ll = ll[..., 0]
+        m_glob = jax.lax.pmax(mm, axis)
+        corr = jnp.exp(mm - m_glob)
+        # numerator rides the wire at the output dtype — the bytes the
+        # model prices (all-reduce of the localized chain's O tensor)
+        num = jax.lax.psum((o * corr[..., None]).astype(ql.dtype), axis)
+        den = jax.lax.psum(ll * corr, axis)
+        return finalize_partials(num, den[..., None], ql.dtype)
+
+    return _compat.shard_map(
+        body, mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs,
+        check_vma=False)(q, k, v)

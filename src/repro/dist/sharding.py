@@ -228,6 +228,39 @@ def dispatch_mesh_spec(rules: Rules, mesh: jax.sharding.Mesh, *,
     return spec, baxes, feat
 
 
+def ring_dispatch_spec(rules: Rules, mesh: jax.sharding.Mesh, *,
+                       batch: int, kv_len: int,
+                       feature_dims: tuple[int, ...] = (),
+                       ici_bw: Optional[float] = None):
+    """(MeshSpec, batch_axes, reduction_axis) for the ring
+    (kv-sequence-sharded) attention regime — the reduction-sharding
+    sibling of ``dispatch_mesh_spec``, and like it THE single builder
+    both the dispatcher (``dist.ring_dispatch`` via ``kernels.ops``)
+    and the tuner bridge (``launch.mesh.tuner_mesh_spec(
+    shard_reduction=True)``) call, so the priced regime and the
+    executed regime can never drift apart.
+
+    The batch keeps riding the rules' data axes; the tp-or-model axis
+    splits the chain's ``n`` loop (the kv sequence — the cross-op
+    reduction of the attention chain) instead of the heads.  Gating is
+    by ``kv_len`` divisibility; ``feature_dims`` is unused for the
+    placement but accepted for signature symmetry.  Returns a
+    reduction_axis of None (and a spatial-only MeshSpec) when the mesh
+    offers no axis that divides ``kv_len``.
+    """
+    from ..core.perf_model import MeshSpec, V5E
+    baxes = batch_placement(rules, mesh, batch)
+    ax = rules.tp or rules.model
+    if not (ax and ax not in baxes and ax in mesh.shape
+            and mesh.shape[ax] > 1 and kv_len % mesh.shape[ax] == 0):
+        ax = None
+    ici_bw = V5E.ici_bw if ici_bw is None else ici_bw
+    spec = MeshSpec.from_mesh(
+        mesh, placement=((("n", ax),) if ax else ()),
+        batch_axes=baxes, ici_bw=ici_bw)
+    return spec, baxes, ax
+
+
 def constrain(x: jax.Array, rules: Rules,
               *logical: Optional[str]) -> jax.Array:
     """Apply ``jax.lax.with_sharding_constraint`` mapping each of ``x``'s

@@ -71,6 +71,153 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
         o_ref[0, 0] = (o_acc[...] / l).astype(o_ref.dtype)
 
 
+def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
+                         o_acc, m_sc, l_sc, *, n_kv_blocks, bq, bkv,
+                         row_start, causal, window, scale):
+    """Per-shard body of the ring (kv-sequence-sharded) regime.
+
+    Identical online-softmax recurrence to ``_attn_kernel`` with two
+    differences: masks are evaluated against GLOBAL positions (query
+    rows start at ``row_start``; key columns come from ``pos_ref``, the
+    shard's slice of the global kv index space — a causal or windowed
+    boundary can fall anywhere inside a shard), and the epilogue emits
+    the raw combine state ``(o_unnormalized, running_max, running_sum)``
+    instead of normalizing, so shards merge associatively via
+    log-sum-exp (docs/design.md §7)."""
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[0, 0]                       # (bq, d)
+    k = k_ref[0, 0]                       # (bkv, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+    if causal or window > 0:
+        i = pl.program_id(2)
+        rows = (row_start + i * bq
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
+        cols = pos_ref[...]               # (1, bkv) global kv positions
+        mask = cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[:, :1]                  # (bq, 1)
+    l_prev = l_sc[:, :1]
+    m_curr = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_curr)
+    p = jnp.exp(s - m_new)                # (bq, bkv)
+    corr = jnp.exp(m_prev - m_new)        # (bq, 1)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+
+    o_acc[...] = (o_acc[...] * corr
+                  + jnp.dot(p.astype(v_ref.dtype), v_ref[0, 0],
+                            preferred_element_type=jnp.float32))
+    m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+    l_sc[...] = jnp.broadcast_to(l_new, l_sc.shape)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _():
+        # Rows masked across this ENTIRE shard still accumulated
+        # p = exp(NEG_INF - NEG_INF) = 1 per masked key; zero them so
+        # the shard emits the merge identity (0, NEG_INF, 0) instead of
+        # a spurious sum.  (Rows only partially masked are safe: the
+        # first unmasked block's rescale multiplies the junk by
+        # exp(NEG_INF - finite) = 0.)
+        dead = m_sc[:, :1] <= NEG_INF * 0.5
+        o_ref[0, 0] = jnp.where(dead, 0.0, o_acc[...])  # unnorm., f32
+        m_ref[0, 0] = m_sc[:, :1]
+        l_ref[0, 0] = jnp.where(dead, 0.0, l_sc[:, :1])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bq", "bkv", "causal", "window", "scale", "row_start", "interpret"))
+def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_pos: jax.Array | None = None,
+                            bq: int = 128, bkv: int = 128,
+                            causal: bool = False, window: int = 0,
+                            scale: float | None = None,
+                            row_start: int = 0,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One shard's partial softmax-attention over its local kv slice.
+
+    q: (B, Hq, M, D), k/v: (B, Hkv, N_local, D/Dv).  ``kv_pos``
+    (N_local,) int32 holds the GLOBAL position of each local kv slot
+    (default ``arange``); ``row_start`` is the global position of q's
+    first row.  Returns ``(o_unnorm, m_run, l_run)`` with
+
+        o_unnorm (B, Hq, M, Dv) f32 = sum_n exp(s_n - m_run) * v_n
+        m_run    (B, Hq, M, 1)  f32 = running max of masked scores
+        l_run    (B, Hq, M, 1)  f32 = sum_n exp(s_n - m_run)
+
+    so that for any split of the kv axis the shards merge with the
+    associative log-sum-exp combine (``dist.ring_dispatch.
+    merge_partials``); a single shard over the whole kv followed by
+    ``finalize_partials`` reproduces ``fused_attention`` exactly.
+    Rows entirely masked within this shard come back as
+    ``(0, NEG_INF, 0)`` — the identity element of the merge.
+    """
+    b, hq, m, d = q.shape
+    _, hkv, n, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if kv_pos is None:
+        kv_pos = jnp.arange(n, dtype=jnp.int32)
+    bq = min(bq, m)
+    bkv = min(bkv, n)
+    while m % bq:
+        bq -= 1
+    while n % bkv:
+        bkv -= 1
+    pos2d = kv_pos.astype(jnp.int32).reshape(1, n)
+    grid = (b, hq, m // bq, n // bkv)
+
+    kernel = functools.partial(
+        _attn_partial_kernel, n_kv_blocks=n // bkv, bq=bq, bkv=bkv,
+        row_start=row_start, causal=causal, window=window, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bkv, dv),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, bkv), lambda b_, h, i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dv), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b_, h, i, j: (b_, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, m, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, m, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+            pltpu.VMEM((bq, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v, pos2d)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bq", "bkv", "causal", "window", "scale", "interpret"))
 def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from .. import _compat
 from ..core import api
 from ..core.perf_model import MeshSpec
+from ..dist import ring_dispatch
 from ..dist.sharding import Rules, default_rules, dispatch_mesh_spec
 from . import ref
 from .attention import fused_attention as _attn_kernel
@@ -106,10 +107,19 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """Fused GQA attention, MCFuser-tuned block schedule.
 
     q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv).
-    mesh: dispatch through shard_map — batch over the rules' data axes,
-    heads over tp-or-model (kv heads must divide too, which preserves
-    the GQA group per shard); the block schedule is tuned for the local
-    (batch x heads) slice.
+    mesh: regime search + dispatch (docs/design.md §7).  Two regimes
+    are enumerated through ``api.fuse_attention_regimes``:
+
+    * spatial — shard_map with batch over the rules' data axes, heads
+      over tp-or-model (kv heads must divide too, which preserves the
+      GQA group per shard); collective-free.
+    * ring — kv sequence sharded over tp-or-model, per-shard
+      partial-softmax kernel + log-sum-exp combine
+      (``dist.ring_dispatch``); pays the combine's all-reduce.
+
+    The tuner prices both under their ``MeshSpec`` (eq 2') and the
+    cheaper one is dispatched — for long kv contexts that a shard's
+    batch/head slice cannot cover, that is the ring regime.
     """
     m = _backend_mode(mode)
     b, hq, M, D = q.shape
@@ -122,6 +132,21 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         spec, baxes, hax = dispatch_mesh_spec(
             rules, mesh, kind="attention", batch=b,
             feature_dims=(hkv, hq))
+        choice = None
+        if m != "ref" and tuned:
+            choice, plan = attention_regime_choice(
+                rules, mesh, batch=b, q_heads=hq, kv_heads=hkv,
+                q_len=M, kv_len=N, head_dim=D, v_dim=Dv,
+                dtype=str(q.dtype), causal=causal, window=window,
+                scale=scale, interpret=interp,
+                spatial=(spec, baxes, hax))
+        if choice is not None and choice.regime == "ring":
+            p = choice.kernel.params
+            return ring_dispatch.ring_attention(
+                q, k, v, mesh=mesh, axis=plan.axis,
+                batch_axes=plan.batch_axes, causal=causal,
+                window=window, scale=scale, bq=p.bq, bkv=p.bkv,
+                interpret=interp)
         if baxes or hax:
             body = _attn_body(M, N, D, Dv, hq, b, str(q.dtype), causal,
                               window, scale, m, tuned, interp, spec)
@@ -142,6 +167,49 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         return tk(q, k, v)
     return _attn_kernel(q, k, v, causal=causal, window=window,
                         scale=scale, interpret=interp)
+
+
+def attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh, *,
+                            batch: int, q_heads: int, kv_heads: int,
+                            q_len: int, kv_len: int, head_dim: int,
+                            v_dim: Optional[int] = None,
+                            dtype: str = "float32",
+                            causal: bool = False, window: int = 0,
+                            scale: Optional[float] = None,
+                            interpret: bool = True,
+                            spatial=None):
+    """(RegimeChoice, RingPlan) for one attention shape on this mesh —
+    the exact decision ``attention()`` dispatches, factored out so
+    tests, serving drivers, and the dry-run can ask "which regime would
+    run here?" without executing anything.
+
+    Returns ``(None, None)`` when the mesh offers no kv split (no ring
+    candidate — the spatial path needs no search: it is the only
+    option).  The spatial entry is the ``dispatch_mesh_spec`` placement
+    when one exists, else ``None`` (replicated single-device
+    execution), and is listed first so the collective-free regime wins
+    ties.  ``spatial`` lets ``attention()`` pass the (spec, baxes,
+    feature_axis) triple it already derived, so the regime compared
+    here is the placement dispatched there by construction.
+    """
+    v_dim = head_dim if v_dim is None else v_dim
+    if spatial is None:
+        spatial = dispatch_mesh_spec(
+            rules, mesh, kind="attention", batch=batch,
+            feature_dims=(kv_heads, q_heads))
+    spec, baxes, hax = spatial
+    plan = ring_dispatch.plan_ring_attention(
+        rules, mesh, batch=batch, kv_len=kv_len,
+        feature_dims=(kv_heads, q_heads))
+    if plan is None:
+        return None, None
+    regimes = {"spatial": spec if (baxes or hax) else None,
+               "ring": plan.spec}
+    choice = api.fuse_attention_regimes(
+        q_len, kv_len, head_dim, v_dim, heads=q_heads, batch=batch,
+        dtype=dtype, causal=causal, window=window, scale=scale,
+        regimes=regimes, interpret=interpret)
+    return choice, plan
 
 
 def _attn_body(M, N, D, Dv, heads, batch, dtype, causal, window, scale,

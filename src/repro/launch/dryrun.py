@@ -123,11 +123,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mf = hlo_analysis.model_flops(cfg, shape, n_dev)
     # MCFuser kernelization: replace XLA's unfusable attention-interior
     # HBM traffic by the tuned fused-kernel traffic (the paper's win),
-    # tuned under THIS cell's mesh regime (tuner_mesh_spec) — and cached
-    # on disk (core.schedule_cache), so identical localized chains
-    # across sweep cells tune once.
+    # regime-searched under THIS cell's mesh (spatial vs ring per layer
+    # shape, the same decision kernels.ops.attention dispatches) — and
+    # cached on disk (core.schedule_cache), so identical localized
+    # chains across sweep cells tune once.
+    attn_regimes: dict = {}
     attn_kernel_bytes, n_attn = hlo_analysis.kernelized_attention_bytes(
-        cfg, shape, n_dev, mesh=mesh, rules=rules)
+        cfg, shape, n_dev, mesh=mesh, rules=rules,
+        regime_log=attn_regimes)
     bytes_xla = total.bytes
     if shape.kind == "decode":
         # single-token decode has no fusable attention interior, and the
@@ -169,6 +172,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "interior_bytes_xla": attr.attn.bytes,
             "kernelized_bytes": attn_kernel_bytes,
             "n_instances": n_attn,
+            "regimes": attn_regimes,   # {"MxN": "spatial" | "ring"}
         },
         "roofline": {
             "flops_per_device": total.flops,

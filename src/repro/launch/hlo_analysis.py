@@ -139,7 +139,9 @@ def model_flops(cfg, shape, n_devices: int) -> float:
 
 
 def kernelized_attention_bytes(cfg, shape, n_dev: int, mesh=None,
-                               rules=None) -> tuple[float, int]:
+                               rules=None,
+                               regime_log: dict | None = None
+                               ) -> tuple[float, int]:
     """Per-device HBM bytes of all attention layers when executed as the
     MCFuser-tuned fused Pallas kernel (score tiles stay in VMEM).
 
@@ -148,14 +150,19 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int, mesh=None,
     tuner decides the production kernel's traffic, the dry-run only
     replaces XLA's unfusable-interior accounting with it.
 
-    With a ``mesh`` (+ the cell's ``dist.sharding.Rules``), the tuning
-    runs under ``launch.mesh.tuner_mesh_spec`` — the same regime
-    ``kernels.ops.attention`` dispatches — so the schedule is picked
-    for the *localized* chain (heads/batch sharded over data + tp axes,
-    which moves alpha and therefore the best tile) and the returned
-    bytes are one shard's traffic.  Meshless (mesh=None) keeps the
-    legacy single-chip accounting: per-instance bytes times the
-    ``batch * heads / n_dev`` head-batch fraction.
+    With a ``mesh`` (+ the cell's ``dist.sharding.Rules``), each layer
+    shape runs the same **regime search** ``kernels.ops.attention``
+    dispatches (docs/design.md §7): the spatial regime
+    (``tuner_mesh_spec``, heads/batch over data + tp axes) against the
+    ring regime (``shard_reduction=True``, kv sequence over tp) — the
+    model picks per (q_len, kv_len), so long-context cells price the
+    kv-sharded kernel exactly when serving would run it.  The returned
+    bytes are one shard's traffic under the winning regime.  Meshless
+    (mesh=None) keeps the legacy single-chip accounting: per-instance
+    bytes times the ``batch * heads / n_dev`` head-batch fraction.
+
+    ``regime_log`` (optional dict) records ``{"MxN": regime}`` per
+    distinct layer shape for the sweep record.
 
     Returns (bytes, n_attention_instances).
     """
@@ -180,17 +187,42 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int, mesh=None,
     def layer_bytes(m, n):
         """Per-device bytes of one attention layer (all its local
         head-batch instances) for (q_len=m, kv_len=n)."""
-        if spec is None:
+        ring = None
+        if mesh is not None:
+            from .mesh import tuner_mesh_spec
+            ring = tuner_mesh_spec(mesh, rules, kind="attention",
+                                   batch=shape.batch,
+                                   feature_dim=cfg.n_kv_heads,
+                                   reduction_dim=n,
+                                   shard_reduction=True)
+            if not any(l == "n" for l, _ in ring.placement):
+                ring = None   # no axis divides kv: not a ring regime
+                # (a batch-only spec would just re-run the spatial
+                # search under a second name)
+        if spec is None and ring is None:
             tk = api.fuse_attention(m, n, dh, dh, heads=1, batch=1,
                                     dtype=cfg.dtype)
             hb = shape.batch * cfg.n_heads / n_dev
             return t_mem(tk.report.best, V5E) * V5E.hbm_bw * hb
-        tk = api.fuse_attention(m, n, dh, dh, heads=cfg.n_heads,
-                                batch=shape.batch, dtype=cfg.dtype,
-                                mesh=spec)
+        regimes = {"spatial": spec}
+        if ring is not None:
+            regimes["ring"] = ring
+        choice = api.fuse_attention_regimes(
+            m, n, dh, dh, heads=cfg.n_heads, batch=shape.batch,
+            dtype=cfg.dtype, regimes=regimes)
+        if regime_log is not None:
+            regime_log[f"{m}x{n}"] = choice.regime
+        if choice.regime == "spatial" and spec is None:
+            # replicated spatial baseline won: keep the sweep's
+            # per-device accounting (XLA still spreads the head-batch
+            # instances across devices even though the fused dispatch
+            # itself has nothing to shard); the kernel here was tuned
+            # over the full head-batch, so divide by n_dev directly
+            return t_mem(choice.kernel.report.best, V5E) * V5E.hbm_bw \
+                / n_dev
         # t_mem of the localized chain already spans the shard's whole
         # head-batch (chain.batch localized by the spec's batch axes)
-        return t_mem(tk.report.best, V5E) * V5E.hbm_bw
+        return t_mem(choice.kernel.report.best, V5E) * V5E.hbm_bw
 
     total = 0.0
     count = 0

@@ -16,7 +16,8 @@ import jax
 
 from ..core.perf_model import MeshSpec, V5E
 from ..dist.sharding import (Rules, batch_placement, default_rules,
-                             dispatch_mesh_spec, feature_placement)
+                             dispatch_mesh_spec, feature_placement,
+                             ring_dispatch_spec)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -68,12 +69,21 @@ def tuner_mesh_spec(mesh: jax.sharding.Mesh,
     ``shard_reduction=True`` instead places the ``n`` loop (the chain's
     cross-op reduction: kv sequence for attention) on tp-or-model,
     gated by ``reduction_dim``'s divisibility — the ring-attention
-    regime whose all-reduce cost the model's collective term prices.
-    ``kernels.ops`` has no dispatch for it yet (see ROADMAP).
+    regime ``dist.ring_dispatch`` executes (partial-softmax kernel +
+    log-sum-exp combine) and the model's collective term prices.
+    ``kernels.ops.attention`` runs the regime search between the two
+    and dispatches the winner.
     """
     if kind not in ("gemm", "attention"):
         raise ValueError(f"unknown chain kind {kind!r}")
     rules = rules if rules is not None else default_rules(mesh)
+    if shard_reduction and batch is not None and reduction_dim is not None:
+        # concrete dims: delegate to the exact builder the ring
+        # dispatcher gates on, so tuner/dispatch parity is structural
+        spec, _, _ = ring_dispatch_spec(rules, mesh, batch=batch,
+                                        kv_len=reduction_dim,
+                                        ici_bw=ici_bw)
+        return spec
     if not shard_reduction and batch is not None \
             and feature_dim is not None:
         # concrete dims: delegate to the exact builder the dispatcher

@@ -2,6 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --batch 4 --prompt-len 64 --gen 32
+
+Sharded serving (regime-aware, docs/design.md §7): with
+``--shard-model N`` the driver builds a host mesh whose model axis is
+N, threads ``mesh=``/``rules=`` through the model Runtime — decode
+attention then runs the distributed partial-softmax path over the
+seq-sharded KV cache instead of silently using the unsharded path —
+and prints the tuner's spatial-vs-ring regime choice for the prefill
+and full-context attention shapes.  Force host devices first, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --shard-model 4
 """
 from __future__ import annotations
 
@@ -44,6 +55,91 @@ def generate(model, params, prompts: jax.Array, gen: int,
     return np.stack([np.asarray(t) for t in out], axis=1)
 
 
+def sharded_runtime(shard_model: int):
+    """(mesh, rules, Runtime) for ``--shard-model N`` serving: N == 1
+    is the plain single-device runtime; N > 1 builds the host mesh and
+    the decode regime (resident TP weight shards, distributed
+    partial-softmax decode over the seq-sharded KV cache)."""
+    if shard_model <= 1:
+        return None, None, Runtime(remat=False)
+    mesh = make_host_mesh(model_axis=shard_model)
+    rules = Rules(data=("data",), model="model", tp="model",
+                  fsdp=False)   # decode regime: resident TP weights
+    return mesh, rules, Runtime(rules=rules, mesh=mesh, remat=False,
+                                dist_decode_attn=True)
+
+
+def demo_side_inputs(cfg, batch: int) -> tuple[dict, int]:
+    """Random encoder frames / prefix embeds for archs that need them,
+    plus the extra kv positions they prepend to the sequence."""
+    kwargs: dict = {}
+    extra = 0
+    if cfg.family == "encdec":
+        kwargs["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (batch, cfg.encoder.n_frames, cfg.d_model))
+        extra = cfg.encoder.n_frames
+    if cfg.n_prefix_embeds:
+        kwargs["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (batch, cfg.n_prefix_embeds, cfg.d_model))
+        extra = cfg.n_prefix_embeds
+    return kwargs, extra
+
+
+def run_generate(cfg, model, params, prompts, gen: int, *,
+                 mesh=None, rules=None, extra: int = 0,
+                 **kwargs) -> tuple[np.ndarray, float]:
+    """``generate`` wrapped for either posture; returns (tokens, s).
+
+    With a mesh: enters it, prints the tuner's spatial-vs-ring regime
+    choice for this job's attention shapes, and places the params
+    before generating — the shared body of ``launch.serve`` and
+    ``examples/serve_batched.py``."""
+    b, plen = prompts.shape
+    if mesh is None:
+        t0 = time.perf_counter()
+        tokens = generate(model, params, prompts, gen, **kwargs)
+        return tokens, time.perf_counter() - t0
+    with jax.set_mesh(mesh):
+        report_attention_regimes(cfg, mesh, rules, batch=b,
+                                 prompt_len=plen,
+                                 total_len=plen + extra + gen)
+        params = jax.device_put(
+            params, S.shardings_for(mesh, model.param_specs()))
+        t0 = time.perf_counter()
+        tokens = generate(model, params, prompts, gen, **kwargs)
+        return tokens, time.perf_counter() - t0
+
+
+def report_attention_regimes(cfg, mesh, rules, *, batch: int,
+                             prompt_len: int, total_len: int) -> dict:
+    """Print (and return) the regime the tuner picks for this serving
+    job's attention shapes — prefill (q=kv=prompt) and the grown
+    decode context (q=prompt rows over the full kv) — via the exact
+    decision path ``kernels.ops.attention`` dispatches."""
+    from ..kernels import ops
+
+    picks: dict[str, str] = {}
+    for label, (m, n) in (("prefill", (prompt_len, prompt_len)),
+                          ("decode_ctx", (prompt_len, total_len))):
+        choice, _ = ops.attention_regime_choice(
+            rules, mesh, batch=batch, q_heads=cfg.n_heads,
+            kv_heads=cfg.n_kv_heads, q_len=m, kv_len=n,
+            head_dim=cfg.dh, dtype=cfg.dtype, causal=True)
+        if choice is None:
+            picks[label] = "spatial"
+            print(f"regime[{label}] q={m} kv={n}: spatial "
+                  f"(mesh offers no kv split)")
+        else:
+            picks[label] = choice.regime
+            times = " ".join(f"{k}={v * 1e6:.1f}us"
+                             for k, v in choice.times.items())
+            print(f"regime[{label}] q={m} kv={n}: {choice.regime} "
+                  f"({times})")
+    return picks
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b",
@@ -53,28 +149,25 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shard-model", type=int, default=1,
+                    help="model-axis size of the host mesh; > 1 serves "
+                         "sharded (force host devices via XLA_FLAGS)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=not args.full)
-    model = S.build_model(cfg, Runtime(remat=False))
+    mesh, rules, rt = sharded_runtime(args.shard_model)
+    model = S.build_model(cfg, rt)
     params = model.init_params(jax.random.PRNGKey(args.seed))
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    kwargs = {}
-    if cfg.family == "encdec":
-        kwargs["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.encoder.n_frames, cfg.d_model))
-    if cfg.n_prefix_embeds:
-        kwargs["prefix_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.n_prefix_embeds, cfg.d_model))
-
-    t0 = time.perf_counter()
-    tokens = generate(model, params, prompts, args.gen, **kwargs)
-    dt = time.perf_counter() - t0
+    kwargs, extra = demo_side_inputs(cfg, args.batch)
+    tokens, dt = run_generate(cfg, model, params, prompts, args.gen,
+                              mesh=mesh, rules=rules, extra=extra,
+                              **kwargs)
+    shard = f" mesh=data{mesh.shape['data']}xmodel{mesh.shape['model']}" \
+        if mesh is not None else ""
     print(f"arch={cfg.name} generated {tokens.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s){shard}")
     print("sample:", tokens[0][:16].tolist())
     return tokens
 

@@ -1,0 +1,289 @@
+"""Ring (kv-sequence-sharded) attention: partial-softmax combine,
+regime search, and the 8-device dispatch (docs/design.md §7).
+
+Fast tests exercise the combine algebra host-side (slicing the kv axis
+by hand — no devices needed) and the analytic regime search; the slow
+subprocess test runs the real shard_map dispatch on 8 forced host
+devices and pins the acceptance contract: automatic ring selection for
+long contexts, reference numerics, executed collective traffic equal
+to ``core.ring`` pricing, and measured per-device HBM bytes below the
+spatial regime's.
+"""
+import itertools
+import json
+import os
+import random
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.perf_model import MeshSpec
+from repro.dist.ring_dispatch import (finalize_partials, merge_partials,
+                                      plan_ring_attention)
+from repro.dist.sharding import Rules, ring_dispatch_spec
+from repro.kernels.attention import fused_attention, fused_attention_partial
+from repro.kernels.ref import gqa_attention_ref
+
+
+def _qkv(b=1, hq=4, hkv=2, m=64, n=256, d=32, seed=0):
+    kx = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kx[0], (b, hq, m, d), jnp.float32)
+    k = jax.random.normal(kx[1], (b, hkv, n, d), jnp.float32)
+    v = jax.random.normal(kx[2], (b, hkv, n, d), jnp.float32)
+    return q, k, v
+
+
+def _sharded_partials(q, k, v, shards, *, causal, window, bq=32, bkv=32):
+    """Run the partial kernel per kv slice with global positions — the
+    host-level twin of what each shard_map shard computes."""
+    n = k.shape[2]
+    assert n % shards == 0
+    nl = n // shards
+    out = []
+    for i in range(shards):
+        sl = slice(i * nl, (i + 1) * nl)
+        out.append(fused_attention_partial(
+            q, k[:, :, sl], v[:, :, sl],
+            jnp.arange(i * nl, (i + 1) * nl, dtype=jnp.int32),
+            bq=bq, bkv=bkv, causal=causal, window=window,
+            row_start=n - q.shape[2], interpret=True))
+    return out
+
+
+def _merge_all(parts):
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = merge_partials(acc, p)
+    return acc
+
+
+class TestPartialKernel:
+    def test_single_shard_reproduces_fused_attention(self):
+        q, k, v = _qkv()
+        for causal, window in [(False, 0), (True, 0), (True, 80)]:
+            full = fused_attention(q, k, v, bq=32, bkv=64, causal=causal,
+                                   window=window, interpret=True)
+            o, m, l = fused_attention_partial(
+                q, k, v, bq=32, bkv=64, causal=causal, window=window,
+                row_start=k.shape[2] - q.shape[2], interpret=True)
+            got = finalize_partials(o, l, q.dtype)
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(full))
+
+    def test_fully_masked_shard_is_merge_identity(self):
+        """A causal split puts later kv shards entirely above early
+        query rows; those shards must emit the (0, -inf, 0) identity
+        so the merge is exact, not approximately cancelled."""
+        q, k, v = _qkv(m=32, n=128)
+        # shard covering kv positions [96, 128): rows 96..127 of a
+        # decode-tail q (rows 96..127) see some of it, but pretend q
+        # sits at rows [0, 32): everything is masked
+        o, m, l = fused_attention_partial(
+            q, k[:, :, 96:], v[:, :, 96:],
+            jnp.arange(96, 128, dtype=jnp.int32),
+            bq=32, bkv=32, causal=True, row_start=0, interpret=True)
+        assert float(jnp.max(jnp.abs(o))) == 0.0
+        assert float(jnp.max(l)) == 0.0
+        assert float(jnp.max(m)) < -1e29
+
+
+class TestCombine:
+    @pytest.mark.parametrize("shards", [1, 2, 4, 8])
+    @pytest.mark.parametrize("causal,window", [(False, 0), (True, 0),
+                                               (True, 100)])
+    def test_combine_matches_reference(self, shards, causal, window):
+        """Log-sum-exp merge over any shard count reproduces the
+        single-device reference within fp32 tolerance — including
+        causal and windowed mask boundaries falling mid-shard."""
+        q, k, v = _qkv(m=64, n=256)
+        parts = _sharded_partials(q, k, v, shards, causal=causal,
+                                  window=window)
+        o, m, l = _merge_all(parts)
+        got = finalize_partials(o, l, q.dtype)
+        ref = gqa_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6, rtol=2e-6)
+
+    def test_merge_is_permutation_invariant(self):
+        """Associativity + commutativity: any merge order of the shard
+        partials yields the same output (up to f32 rounding) — the
+        property that lets an all-reduce implement the combine."""
+        q, k, v = _qkv(m=64, n=256)
+        parts = _sharded_partials(q, k, v, 4, causal=True, window=0)
+        o0, _, l0 = _merge_all(parts)
+        base = finalize_partials(o0, l0, q.dtype)
+        for perm in itertools.permutations(range(4)):
+            o, m, l = _merge_all([parts[i] for i in perm])
+            got = finalize_partials(o, l, q.dtype)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                       atol=1e-6, rtol=1e-6)
+
+    def test_merge_is_associative_on_random_groupings(self):
+        q, k, v = _qkv(m=32, n=256, seed=3)
+        parts = _sharded_partials(q, k, v, 8, causal=True, window=0)
+        of, _, lf = _merge_all(parts)
+        flat = finalize_partials(of, lf, q.dtype)
+        rng = random.Random(0)
+        for _ in range(4):
+            items = list(parts)
+            while len(items) > 1:       # random binary merge tree
+                i = rng.randrange(len(items) - 1)
+                items[i] = merge_partials(items[i], items.pop(i + 1))
+            got = finalize_partials(items[0][0], items[0][2], q.dtype)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(flat),
+                                       atol=1e-6, rtol=1e-6)
+
+
+class TestRegimeSearch:
+    def test_ring_spec_gating(self):
+        mesh = SimpleNamespace(shape={"data": 2, "model": 4})
+        rules = Rules(data=("data",), model="model", tp="model")
+        spec, baxes, ax = ring_dispatch_spec(rules, mesh, batch=4,
+                                             kv_len=4096)
+        assert ax == "model" and spec.placement == (("n", "model"),)
+        assert baxes == ("data",) and spec.batch_axes == ("data",)
+        # non-dividing kv: no ring candidate
+        _, _, ax2 = ring_dispatch_spec(rules, mesh, batch=4, kv_len=4098)
+        assert ax2 is None
+        assert plan_ring_attention(rules, mesh, batch=4,
+                                   kv_len=4098) is None
+
+    def test_tuner_and_dispatcher_build_identical_ring_spec(self):
+        """Structural parity: tuner_mesh_spec(shard_reduction=True)
+        delegates to the same builder the dispatcher gates on."""
+        from repro.launch.mesh import tuner_mesh_spec
+        mesh = SimpleNamespace(shape={"data": 2, "model": 4})
+        rules = Rules(data=("data",), model="model", tp="model")
+        spec, _, _ = ring_dispatch_spec(rules, mesh, batch=4, kv_len=8192)
+        spec2 = tuner_mesh_spec(mesh, rules, kind="attention", batch=4,
+                                reduction_dim=8192, shard_reduction=True)
+        assert spec == spec2
+
+    def test_regime_search_crosses_over_with_context_length(self):
+        """fuse_attention_regimes picks ring exactly when the model
+        prices the kv-sharded kernel + combine under the spatial
+        regime's time; both entries cache under distinct keys."""
+        ring8 = MeshSpec(axes=(("model", 8),),
+                         placement=(("n", "model"),))
+        long = api.fuse_attention_regimes(
+            128, 8192, 64, 64, heads=4, batch=1, dtype="float32",
+            causal=True, regimes={"spatial": None, "ring": ring8})
+        assert long.regime == "ring"
+        assert long.times["ring"] < long.times["spatial"]
+        short = api.fuse_attention_regimes(
+            128, 512, 64, 64, heads=4, batch=1, dtype="float32",
+            causal=True, regimes={"spatial": None, "ring": ring8})
+        assert short.regime == "spatial"
+        # distinct cache identities per regime
+        assert ring8.canonical() != MeshSpec.single().canonical()
+
+    def test_rank_regimes_is_deterministic_on_ties(self):
+        from repro.core.search import rank_regimes
+        a = SimpleNamespace(best_time=1.0)
+        b = SimpleNamespace(best_time=1.0)
+        assert rank_regimes({"spatial": a, "ring": b})[0] == "spatial"
+        assert rank_regimes({"ring": b, "spatial": a})[0] == "ring"
+
+
+RING_EXEC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core.chain import attention_chain
+from repro.core.perf_model import collective_bytes
+from repro.dist.sharding import Rules
+from repro.kernels import ops
+from repro.kernels.ref import gqa_attention_ref
+from repro.launch import hlo_analysis
+
+mesh = jax.make_mesh((8,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rules = Rules(model="model", tp="model")
+out = {"shapes": []}
+
+# two long-context shapes (B, Hq, Hkv, M, N, D) where batch x heads
+# cannot cover the mesh and kv is long: the ring regime must win
+for B, Hq, Hkv, M, N, D in [(1, 4, 2, 128, 8192, 64),
+                            (1, 2, 2, 256, 4096, 64)]:
+    kx = jax.random.split(jax.random.PRNGKey(N), 3)
+    q = jax.random.normal(kx[0], (B, Hq, M, D), jnp.float32)
+    k = jax.random.normal(kx[1], (B, Hkv, N, D), jnp.float32)
+    v = jax.random.normal(kx[2], (B, Hkv, N, D), jnp.float32)
+
+    choice, plan = ops.attention_regime_choice(
+        rules, mesh, batch=B, q_heads=Hq, kv_heads=Hkv, q_len=M,
+        kv_len=N, head_dim=D, dtype="float32", causal=True,
+        interpret=True)
+    rec = {"shape": [B, Hq, Hkv, M, N, D], "regime": choice.regime,
+           "t_spatial": choice.times["spatial"],
+           "t_ring": choice.times["ring"]}
+
+    # (b) numerics: the dispatched program vs the single-device oracle
+    got = ops.attention(q, k, v, causal=True, mode="interpret",
+                        mesh=mesh, rules=rules)
+    ref = gqa_attention_ref(q, k, v, causal=True)
+    rec["maxerr"] = float(jnp.max(jnp.abs(got - ref)))
+
+    # executed collective traffic of the combine vs core.ring pricing
+    fn = jax.jit(lambda a, b, c: ops.attention(
+        a, b, c, causal=True, mode="interpret", mesh=mesh, rules=rules))
+    compiled = fn.lower(q, k, v).compile()
+    stats = hlo_analysis.parse_collectives(compiled.as_text())
+    chain = attention_chain(M, N, D, D, heads=Hq, batch=B,
+                            dtype="float32", causal=True)
+    local = plan.spec.localize(chain)
+    rec["traffic_executed"] = stats.traffic_bytes
+    rec["traffic_priced"] = collective_bytes(local, plan.spec)
+    rec["coll_counts"] = stats.counts
+
+    # (c) measured per-device HBM bytes: ring dispatch vs the spatial
+    # regime (replicated here — heads cannot cover the mesh), from XLA
+    # cost_analysis on the compiled interpret-mode programs
+    def bytes_of(compiled_):
+        ca = compiled_.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return float(ca["bytes accessed"])
+    rec["bytes_ring"] = bytes_of(compiled)
+    sp = jax.jit(lambda a, b, c: ops.attention(
+        a, b, c, causal=True, mode="interpret"))
+    rec["bytes_spatial"] = bytes_of(sp.lower(q, k, v).compile())
+    out["shapes"].append(rec)
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_ring_dispatch_acceptance_8dev(tmp_path):
+    """Acceptance contract on an 8-device forced-host mesh, two
+    long-context shapes: (a) regime search auto-selects ring, (b) the
+    dispatched program matches the single-device reference within fp32
+    tolerance, (c) ring beats spatial in both the model estimate and
+    measured per-device bytes, and the executed combine traffic equals
+    ``core.ring.ring_traffic_bytes`` pricing on the compiled HLO."""
+    script = tmp_path / "ring_exec.py"
+    script.write_text(RING_EXEC_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[-1][len("RESULT "):])
+    assert len(out["shapes"]) == 2
+    for rec in out["shapes"]:
+        assert rec["regime"] == "ring", rec
+        assert rec["t_ring"] < rec["t_spatial"], rec
+        assert rec["maxerr"] < 2e-6, rec
+        assert rec["traffic_executed"] == pytest.approx(
+            rec["traffic_priced"], rel=1e-6), rec
+        assert rec["bytes_ring"] < rec["bytes_spatial"], rec

@@ -92,6 +92,45 @@ def test_corrupt_entry_falls_back_to_tuning(tmp_path):
     assert tk.source == "search"
 
 
+def test_measured_and_analytic_entries_never_collide(tmp_path,
+                                                     monkeypatch):
+    """ROADMAP follow-up (PR 3): wall-clock (measured) trials persist
+    under a distinct fingerprint component, so an analytic outcome can
+    never satisfy a measured lookup or vice versa."""
+    from repro.core.perf_model import estimate
+
+    key = ("gemm", 512, 512, 128, 128, 1, "bfloat16", "tpu_v5e", 128,
+           None, 0)
+    assert schedule_cache.entry_path(key, V5E, "analytic") \
+        != schedule_cache.entry_path(key, V5E, "measured")
+    with pytest.raises(ValueError):
+        schedule_cache.entry_path(key, V5E, "wallclock")
+
+    # analytic entry on disk; a measured-trial fuse of the SAME shape
+    # must re-search (and write a second, disjoint entry)
+    api.fuse_gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    assert len(list(tmp_path.glob("*.json"))) == 1
+    api.clear_cache()
+    measured = api.fuse_gemm_chain(
+        512, 512, 128, 128, dtype="bfloat16",
+        measure_fn=lambda s: estimate(s, V5E))
+    assert measured.source == "search"
+    assert len(list(tmp_path.glob("*.json"))) == 2
+
+    # and each population round-trips within its own kind
+    api.clear_cache()
+    _forbid_search(monkeypatch)
+    warm = api.fuse_gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    assert warm.source == "disk"
+    api.clear_cache()
+    warm_measured = api.fuse_gemm_chain(
+        512, 512, 128, 128, dtype="bfloat16",
+        measure_fn=lambda s: estimate(s, V5E))
+    assert warm_measured.source == "disk"
+    assert schedule_cache.load(key, V5E, "measured") is not None
+    assert schedule_cache.load(key, V5E, "analytic") is not None
+
+
 def test_clear_only_removes_cache_entries(tmp_path):
     """REPRO_CACHE_DIR may be a shared scratch dir: clear() must not
     unlink JSON files the cache did not create."""
