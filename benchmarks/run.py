@@ -38,21 +38,25 @@ def main(argv=None) -> None:
     ap.add_argument("--no-json", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI lane: asserting subset only — tuning-time "
-                         "budgets/engine parity (bench_tuning_time) plus "
+                         "budgets/engine parity (bench_tuning_time), "
                          "the mesh regime sweep incl. the ring-attention "
-                         "crossover (bench_mesh_tuning); writes no JSON")
+                         "crossover (bench_mesh_tuning), and the "
+                         "continuous-batching scheduler + paged regime "
+                         "warm start (bench_serving); writes no JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import bench_mesh_tuning, bench_tuning_time
+        from . import bench_mesh_tuning, bench_serving, bench_tuning_time
         with isolated_schedule_cache():
             rc = bench_tuning_time.smoke()
             rc = bench_mesh_tuning.smoke() or rc
+            rc = bench_serving.smoke() or rc
         sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,
                    bench_gemm_chain, bench_mesh_tuning,
-                   bench_model_accuracy, bench_tuning_time, roofline)
+                   bench_model_accuracy, bench_serving,
+                   bench_tuning_time, roofline)
 
     rows_by_mod: dict[str, list] = {}
     print("name,us_per_call,derived")
@@ -63,6 +67,8 @@ def main(argv=None) -> None:
             (bench_end_to_end, "Fig 9"),
             (bench_tuning_time, "Table IV"),
             (bench_mesh_tuning, "mesh-aware tuning (docs/tuning.md)"),
+            (bench_serving, "continuous vs fixed batching "
+                            "(docs/serving.md)"),
             (bench_model_accuracy, "Figs 10-11"),
             (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
             (roofline, "Roofline summary (dry-run artifacts)"),
@@ -97,6 +103,8 @@ def main(argv=None) -> None:
         kernels["gemm_chains"] = rows_by_mod["bench_gemm_chain"]
     if "bench_attention" in rows_by_mod:
         kernels["attention"] = rows_by_mod["bench_attention"]
+    if "bench_serving" in rows_by_mod:
+        kernels["serving"] = rows_by_mod["bench_serving"]
     if kernels:
         kernels["schema"] = 1
         _write_json(out / "BENCH_kernels.json", kernels)

@@ -4,10 +4,18 @@ the TPU mesh).
 
     PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
 
+Continuous batching (docs/serving.md) — the Orca-style scheduler over a
+paged KV cache serves a *ragged* workload (per-request prompt and
+generation lengths), admitting and evicting requests every iteration:
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen3-8b \
+        --continuous
+
 Sharded (regime-aware) serving — threads ``mesh=``/``rules=`` into the
 model's attention calls instead of silently using the unsharded path,
-and prints the tuner's spatial-vs-ring regime choice for this job's
-attention shapes (docs/design.md §7):
+and prints the tuner's regime choice for this job's attention shapes
+(docs/design.md §7; composes with ``--continuous``, where the choice
+is paged-spatial vs paged-ring):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_batched.py --shard-model 4
@@ -18,8 +26,18 @@ import jax
 import numpy as np
 
 from repro.configs import ALIASES, ARCHS, get_config
-from repro.launch.serve import demo_side_inputs, run_generate, sharded_runtime
+from repro.launch.serve import (demo_side_inputs, run_continuous,
+                                run_generate, sharded_runtime)
 from repro.launch.steps import build_model
+
+
+def report(name: str, counts: list[int], dt: float, shard: str) -> None:
+    """Honest serving report: per-request generated-token counts (early
+    finish / eviction make them ragged — never assume ``args.gen``)."""
+    total = sum(counts)
+    print(f"{name}: generated {total} tokens across {len(counts)} "
+          f"requests in {dt:.2f}s ({total / dt:.1f} tok/s){shard}")
+    print(f"per-request generated: {counts}")
 
 
 def main():
@@ -32,24 +50,47 @@ def main():
     ap.add_argument("--shard-model", type=int, default=1,
                     help="model-axis size; > 1 serves over a host mesh "
                          "(force host devices via XLA_FLAGS first)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a paged KV cache on "
+                         "a ragged workload (attention-only archs)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="ragged-workload size for --continuous "
+                         "(default 3x batch)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     mesh, rules, rt = sharded_runtime(args.shard_model)
     model = build_model(cfg, rt)
     params = model.init_params(jax.random.PRNGKey(0))
+    shard = f" [model-sharded x{args.shard_model}]" if mesh is not None else ""
+
+    if args.continuous:
+        results, stats = run_continuous(
+            cfg, model, params, batch=args.batch,
+            n_requests=args.requests or 3 * args.batch,
+            prompt_len=args.prompt_len, gen=args.gen,
+            page_size=args.page_size, mesh=mesh, seed=1)
+        counts = [len(r.tokens) for r in results]
+        assert all(c >= 1 for c in counts)
+        report(f"{cfg.name} [continuous, regime={stats['regime']}]",
+               counts, stats["wall_s"], shard)
+        print("request 0:", results[0].tokens[:12])
+        return
+
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
     kwargs, extra = demo_side_inputs(cfg, args.batch)
     tokens, dt = run_generate(cfg, model, params, prompts, args.gen,
                               mesh=mesh, rules=rules, extra=extra,
                               **kwargs)
-    assert tokens.shape == (args.batch, args.gen)
+    assert tokens.shape[0] == args.batch
     assert np.all(tokens >= 0) and np.all(tokens < cfg.vocab)
-    shard = f" [model-sharded x{args.shard_model}]" if mesh is not None else ""
-    print(f"{cfg.name}: generated {tokens.shape[1]} tokens x "
-          f"{tokens.shape[0]} requests in {dt:.2f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s){shard}")
+    # fixed batching decodes every request in lock-step, so each row
+    # really holds tokens.shape[1] generated tokens — counted, not
+    # assumed, so the report stays honest if eviction ever lands here
+    report(f"{cfg.name} [fixed]", [int(tokens.shape[1])] * args.batch, dt,
+           shard)
     print("request 0:", tokens[0][:12].tolist())
 
 

@@ -21,6 +21,7 @@ share one entry — identical localized chains tune once.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass
@@ -31,7 +32,7 @@ import jax
 from . import codegen, schedule_cache
 from .chain import Chain, attention_chain, gemm_chain
 from .dag import build_schedule
-from .perf_model import MeshSpec, TpuSpec, V5E
+from .perf_model import MeshSpec, TpuSpec, V5E, paged_gather_seconds
 from .search import SearchReport, heuristic_search, rank_regimes
 
 _CACHE: dict[tuple, "TunedKernel"] = {}
@@ -179,6 +180,55 @@ def fuse_attention(M: int, N: int, K: int, H: int, heads: int = 1,
     return tk
 
 
+def fuse_attention_paged(M: int, N: int, K: int, H: int, *,
+                         page_size: int, heads: int = 1, batch: int = 1,
+                         dtype: str = "float32", causal: bool = True,
+                         window: int = 0, scale: Optional[float] = None,
+                         hw: TpuSpec = V5E,
+                         mesh: Optional[MeshSpec] = None,
+                         interpret: Optional[bool] = None,
+                         unit: int = 128, seed: int = 0) -> TunedKernel:
+    """Tune the attention chain for the paged-KV serving regime
+    (docs/serving.md) and build ``kernels.attention.
+    fused_attention_paged`` around the winning tiles.
+
+    The tile search is the plain attention search — the paged-gather
+    term is tile-independent — but both cache levels key the paged
+    fingerprint ``("attn-paged", page_size)`` alongside
+    ``MeshSpec.canonical()``, so paged entries never collide with the
+    dense-attention population and a serving restart replays the
+    regime decision from disk (``TunedKernel.source == "disk"``).
+    ``report.best_time`` includes the paged-gather seconds
+    (``perf_model.paged_gather_seconds`` on the localized chain), so
+    ranking paged regimes compares eq (2') + gather like with like.
+    Serving attention is causal by construction (``causal`` exists for
+    pricing symmetry and must stay True for the built kernel).
+    """
+    interp = (not _is_tpu()) if interpret is None else interpret
+    key = ("attn-paged", page_size, M, N, K, H, heads, batch, dtype,
+           causal, window, scale, hw.name, unit, mesh, interp, seed)
+    if key in _CACHE:
+        return _CACHE[key]
+    chain = attention_chain(M, N, K, H, heads=heads, batch=batch,
+                            dtype=dtype, causal=causal, window=window)
+    disk_key = ("attn-paged", page_size, M, N, K, H, heads, batch, dtype,
+                causal, window, scale, hw.name, unit,
+                mesh.canonical() if mesh is not None else None, seed)
+    report, params, dt, source = _tune_or_load(
+        "attn", chain, hw, mesh, unit, seed, disk_key)
+    report = dataclasses.replace(
+        report, best_time=report.best_time
+        + paged_gather_seconds(chain, page_size, hw, mesh))
+
+    from ..kernels.attention import fused_attention_paged as kernel
+
+    fn = functools.partial(kernel, interpret=interp, window=window,
+                           scale=scale, **params.as_kwargs())
+    tk = TunedKernel(fn, report, params, dt, source=source)
+    _CACHE[key] = tk
+    return tk
+
+
 @dataclass
 class RegimeChoice:
     """Outcome of attention regime search: which parallelism regime the
@@ -223,6 +273,43 @@ def fuse_attention_regimes(M: int, N: int, K: int, H: int, *,
                              dtype=dtype, causal=causal, window=window,
                              scale=scale, hw=hw, mesh=spec,
                              interpret=interpret, unit=unit, seed=seed)
+        for name, spec in regimes.items()
+    }
+    order = rank_regimes({n: tk.report for n, tk in kernels.items()})
+    best = order[0]
+    return RegimeChoice(
+        regime=best, kernel=kernels[best],
+        times={n: tk.report.best_time for n, tk in kernels.items()},
+        kernels=kernels)
+
+
+def fuse_attention_paged_regimes(M: int, N: int, K: int, H: int, *,
+                                 page_size: int, heads: int = 1,
+                                 batch: int = 1, dtype: str = "float32",
+                                 window: int = 0,
+                                 scale: Optional[float] = None,
+                                 hw: TpuSpec = V5E,
+                                 regimes: dict[str, Optional[MeshSpec]],
+                                 interpret: Optional[bool] = None,
+                                 unit: int = 128,
+                                 seed: int = 0) -> RegimeChoice:
+    """Regime search over paged-attention candidates — the serving
+    analogue of ``fuse_attention_regimes`` (docs/serving.md).  Every
+    candidate is tuned through ``fuse_attention_paged`` (so its
+    ``best_time`` carries eq (2') plus its own localized paged-gather
+    term, and its outcome persists under the paged fingerprint), and
+    the ranking is the same ``search.rank_regimes``.  List the
+    collective-free regime ("paged-spatial") first: ties break to it.
+    """
+    if not regimes:
+        raise ValueError("regime search needs at least one candidate")
+    kernels = {
+        name: fuse_attention_paged(M, N, K, H, page_size=page_size,
+                                   heads=heads, batch=batch, dtype=dtype,
+                                   causal=True, window=window,
+                                   scale=scale, hw=hw, mesh=spec,
+                                   interpret=interpret, unit=unit,
+                                   seed=seed)
         for name, spec in regimes.items()
     }
     order = rank_regimes({n: tk.report for n, tk in kernels.items()})

@@ -197,6 +197,50 @@ def t_coll(sched: Schedule, mesh: MeshSpec) -> float:
     return collective_bytes(sched.chain, mesh) / mesh.ici_bw
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV serving extension (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+PAGE_TABLE_ENTRY_BYTES = 4   # int32 physical-page index
+
+
+def paged_gather_bytes(chain: Chain, page_size: int,
+                       mesh: "MeshSpec | None" = None) -> float:
+    """Extra HBM traffic the paged-KV regime adds to one attention
+    call (docs/serving.md — the paged extension of eq (2')).
+
+    A paged cache cannot be streamed contiguously: the kernel reaches
+    K/V through the page-table indirection, so each shard's local kv
+    is read page-by-page and staged into the contiguous layout the
+    fused schedule consumes — one read of the pages plus one write of
+    the staged block (2x local kv bytes) — and the page-table entries
+    themselves cross HBM.  The kv extent rounds up to page granularity
+    (a partly filled tail page still moves whole pages).  The term is
+    tile-independent, so it never moves the tile search — only the
+    regime ranking (``api.fuse_attention_paged_regimes``): under a
+    kv-sharding placement each shard gathers only its ``n / shards``
+    slice, which is exactly the localized chain's ``n``.
+
+    ``chain`` must be an attention chain (tensors ``Kt``/``V``);
+    heads fold into ``chain.batch`` as everywhere else in the model.
+    """
+    local = mesh.localize(chain) if mesh is not None else chain
+    n = math.ceil(local.loops["n"] / page_size) * page_size
+    row = (local.loops["k"] * local.tensors["Kt"].dtype_bytes
+           + local.loops["h"] * local.tensors["V"].dtype_bytes)
+    # every chain-batch row walks its own table slice (heads folded
+    # into batch overcount the indirection by the head count, but the
+    # term is 4 bytes against page_size*(K+H) kv bytes per entry)
+    table = math.ceil(n / page_size) * PAGE_TABLE_ENTRY_BYTES * local.batch
+    return 2.0 * n * row * local.batch + table
+
+
+def paged_gather_seconds(chain: Chain, page_size: int,
+                         hw: TpuSpec = V5E,
+                         mesh: "MeshSpec | None" = None) -> float:
+    return paged_gather_bytes(chain, page_size, mesh) / hw.hbm_bw
+
+
 def t_mem(sched: Schedule, hw: TpuSpec = V5E) -> float:
     total = 0.0
     for s in sched.stmts:

@@ -145,3 +145,75 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return _compat.shard_map(
         body, mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs,
         check_vma=False)(q, k, v)
+
+
+def paged_ring_decode_attention(q, k_pages, v_pages, page_table,
+                                positions, *, window: int, scale: float,
+                                rules: Rules, mesh: jax.sharding.Mesh,
+                                batch_axes=None):
+    """Paged decode attention with the page-table COLUMNS (logical
+    pages — the kv reduction axis at page granularity) sharded over the
+    tp-or-model axis (docs/serving.md).
+
+    q: (B, Hq, 1, D); k_pages/v_pages: (n_pages, Hkv, ps, D) — the
+    pools stay replicated (every shard holds them; the engine's writes
+    land identically on each replica), but each shard *gathers* only
+    its ``max_pages / n_shards`` slice of every request's table, so the
+    per-shard HBM traffic — the dominant decode cost — is 1/n of the
+    contiguous gather.  page_table: (B, max_pages), max_pages divisible
+    by the axis size (callers gate); positions: (B,) each request's
+    current row (-1 = inactive slot).
+
+    The combine is the same partial-softmax pmax + two psums as
+    ``models.layers.distributed_decode_attention`` and ``ring_attention``
+    — the exact buffers ``core.perf_model.collective_bytes`` prices for
+    the paged-ring regime.
+    """
+    axis = rules.model
+    n_shards = mesh.shape[axis]
+    b, hq, m, d = q.shape
+    hkv, ps = k_pages.shape[1], k_pages.shape[2]
+    group = hq // hkv
+    mp = page_table.shape[1]
+    assert mp % n_shards == 0, (mp, n_shards)
+    mpl = mp // n_shards
+    bspec = batch_axes if batch_axes else None
+    qs = P(bspec, None, None, None)
+    pgs = P(None, None, None, None)     # replicated page pools
+    ts = P(bspec, axis)                 # table columns sharded
+    pos_s = P(bspec)
+
+    from ..serving.kv_pages import gather_pages, paged_kv_positions
+
+    def body(qb, kpb, vpb, tb, posb):
+        shard = jax.lax.axis_index(axis)
+        kk = gather_pages(kpb, tb)          # (B_local, hkv, mpl*ps, d)
+        vv = gather_pages(vpb, tb)
+        bl = kk.shape[0]
+        kv_pos = paged_kv_positions(tb, ps, first_page=shard * mpl)
+        rows = posb.astype(jnp.int32)[:, None]          # (B, 1) == (B, m)
+        qg = qb.reshape(bl, hkv, group * m, d)
+        s = jnp.einsum("bhmd,bhnd->bhmn", qg, kk,
+                       preferred_element_type=jnp.float32) * scale
+        # every folded (hkv, group*m) query row belongs to the same
+        # request position, so the (B, 1, 1, N) mask broadcasts
+        mask = kv_pos[:, None, None, :] >= 0
+        mask &= kv_pos[:, None, None, :] <= rows[:, None, :, None]
+        if window > 0:
+            mask &= (kv_pos[:, None, None, :]
+                     > rows[:, None, :, None] - window)
+        s = jnp.where(mask, s, -1e30)
+        m_loc = jnp.max(s, axis=-1, keepdims=True)
+        m_glob = jax.lax.pmax(m_loc, axis)
+        p = jnp.exp(s - m_glob)
+        l = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axis)
+        acc = jax.lax.psum(
+            jnp.einsum("bhmn,bhnv->bhmv", p.astype(vv.dtype), vv,
+                       preferred_element_type=jnp.float32), axis)
+        o = finalize_partials(acc, l, qb.dtype)
+        return o.reshape(bl, hq, m, vv.shape[-1])
+
+    return _compat.shard_map(
+        body, mesh=mesh, in_specs=(qs, pgs, pgs, ts, pos_s),
+        out_specs=qs, check_vma=False)(q, k_pages, v_pages, page_table,
+                                       positions)

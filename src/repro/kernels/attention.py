@@ -23,6 +23,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 NEG_INF = -1e30
+# Sentinel "position" for unallocated / out-of-range paged-KV slots:
+# larger than any real position, so the (always-on) causal mask of the
+# paged kernel rejects the slot for every query row.
+INVALID_POS = 1 << 30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
@@ -71,19 +75,22 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
         o_ref[0, 0] = (o_acc[...] / l).astype(o_ref.dtype)
 
 
-def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
+def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref,
+                         o_ref, m_ref, l_ref,
                          o_acc, m_sc, l_sc, *, n_kv_blocks, bq, bkv,
-                         row_start, causal, window, scale):
+                         causal, window, scale):
     """Per-shard body of the ring (kv-sequence-sharded) regime.
 
     Identical online-softmax recurrence to ``_attn_kernel`` with two
     differences: masks are evaluated against GLOBAL positions (query
-    rows start at ``row_start``; key columns come from ``pos_ref``, the
-    shard's slice of the global kv index space — a causal or windowed
-    boundary can fall anywhere inside a shard), and the epilogue emits
-    the raw combine state ``(o_unnormalized, running_max, running_sum)``
-    instead of normalizing, so shards merge associatively via
-    log-sum-exp (docs/design.md §7)."""
+    rows come from ``qpos_ref``, key columns from ``pos_ref`` — the
+    shard's slice of the global kv index space — so a causal or
+    windowed boundary can fall anywhere inside a shard, and paged
+    callers can hand every batch row its own position vectors), and the
+    epilogue emits the raw combine state
+    ``(o_unnormalized, running_max, running_sum)`` instead of
+    normalizing, so shards merge associatively via log-sum-exp
+    (docs/design.md §7)."""
     j = pl.program_id(3)
 
     @pl.when(j == 0)
@@ -99,10 +106,8 @@ def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
         preferred_element_type=jnp.float32) * scale  # (bq, bkv)
 
     if causal or window > 0:
-        i = pl.program_id(2)
-        rows = (row_start + i * bq
-                + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
-        cols = pos_ref[...]               # (1, bkv) global kv positions
+        rows = qpos_ref[...].reshape(bq, 1)  # global q positions
+        cols = pos_ref[...].reshape(1, bkv)  # global kv positions
         mask = cols <= rows
         if window > 0:
             mask &= cols > rows - window
@@ -140,6 +145,7 @@ def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref,
     "bq", "bkv", "causal", "window", "scale", "row_start", "interpret"))
 def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
                             kv_pos: jax.Array | None = None,
+                            q_pos: jax.Array | None = None,
                             bq: int = 128, bkv: int = 128,
                             causal: bool = False, window: int = 0,
                             scale: float | None = None,
@@ -149,9 +155,13 @@ def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
     """One shard's partial softmax-attention over its local kv slice.
 
     q: (B, Hq, M, D), k/v: (B, Hkv, N_local, D/Dv).  ``kv_pos``
-    (N_local,) int32 holds the GLOBAL position of each local kv slot
-    (default ``arange``); ``row_start`` is the global position of q's
-    first row.  Returns ``(o_unnorm, m_run, l_run)`` with
+    holds the GLOBAL position of each local kv slot — shape
+    (N_local,) shared across the batch (default ``arange``) or
+    (B, N_local) per request (the paged layout, where each request's
+    page table maps its slots independently).  ``q_pos`` likewise is
+    the global position of each query row, (M,) or (B, M); it defaults
+    to ``row_start + arange`` (``row_start``: global position of q's
+    first row).  Returns ``(o_unnorm, m_run, l_run)`` with
 
         o_unnorm (B, Hq, M, Dv) f32 = sum_n exp(s_n - m_run) * v_n
         m_run    (B, Hq, M, 1)  f32 = running max of masked scores
@@ -171,18 +181,22 @@ def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
         scale = 1.0 / (d ** 0.5)
     if kv_pos is None:
         kv_pos = jnp.arange(n, dtype=jnp.int32)
+    if q_pos is None:
+        q_pos = row_start + jnp.arange(m, dtype=jnp.int32)
     bq = min(bq, m)
     bkv = min(bkv, n)
     while m % bq:
         bq -= 1
     while n % bkv:
         bkv -= 1
-    pos2d = kv_pos.astype(jnp.int32).reshape(1, n)
+    pos2d = kv_pos.astype(jnp.int32).reshape(-1, n)
+    qpos2d = q_pos.astype(jnp.int32).reshape(-1, m)
+    kvb, qb = pos2d.shape[0], qpos2d.shape[0]
     grid = (b, hq, m // bq, n // bkv)
 
     kernel = functools.partial(
         _attn_partial_kernel, n_kv_blocks=n // bkv, bq=bq, bkv=bkv,
-        row_start=row_start, causal=causal, window=window, scale=scale)
+        causal=causal, window=window, scale=scale)
 
     return pl.pallas_call(
         kernel,
@@ -193,7 +207,10 @@ def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
                          lambda b_, h, i, j: (b_, h // group, j, 0)),
             pl.BlockSpec((1, 1, bkv, dv),
                          lambda b_, h, i, j: (b_, h // group, j, 0)),
-            pl.BlockSpec((1, bkv), lambda b_, h, i, j: (0, j)),
+            pl.BlockSpec((1, bkv), (lambda b_, h, i, j: (b_, j)) if kvb > 1
+                         else (lambda b_, h, i, j: (0, j))),
+            pl.BlockSpec((1, bq), (lambda b_, h, i, j: (b_, i)) if qb > 1
+                         else (lambda b_, h, i, j: (0, i))),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, bq, dv), lambda b_, h, i, j: (b_, h, i, 0)),
@@ -215,7 +232,7 @@ def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
                                  "arbitrary"),
         ),
         interpret=interpret,
-    )(q, k, v, pos2d)
+    )(q, k, v, pos2d, qpos2d)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -269,3 +286,67 @@ def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ),
         interpret=interpret,
     )(q, k, v)
+
+@functools.partial(jax.jit, static_argnames=(
+    "bq", "bkv", "window", "scale", "pages_per_chunk", "interpret"))
+def fused_attention_paged(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_table: jax.Array,
+                          lengths: jax.Array,
+                          bq: int = 128, bkv: int = 128,
+                          window: int = 0, scale: float | None = None,
+                          pages_per_chunk: int = 0,
+                          interpret: bool = False) -> jax.Array:
+    """Fused attention over a paged KV cache (docs/serving.md).
+
+    q: (B, Hq, M, D) — request b's query rows sit at the TAIL of its
+    context, global positions ``lengths[b]-M .. lengths[b]-1`` (the
+    serving decode convention; attention is causal by construction).
+    k_pages/v_pages: (n_pages, Hkv, page_size, D/Dv), the shared page
+    pool (``serving.kv_pages``); page_table: (B, max_pages) int32
+    physical page per logical page, -1 = unallocated; lengths: (B,)
+    int32 context length per request.
+
+    Each chunk of the page table is gathered into the contiguous
+    layout the fused schedule streams and run through
+    ``fused_attention_partial`` with per-request global positions —
+    unallocated slots carry the ``INVALID_POS`` sentinel the causal
+    mask always rejects, and slots past ``lengths[b]`` (a partly
+    filled tail page, possibly holding a previous tenant's stale kv)
+    fail ``col <= row`` the same way.  Chunk states merge with the
+    PR 4 log-sum-exp combine (``dist.ring_dispatch.merge_partials``).
+    With the default single chunk the recurrence visits exactly the
+    blocks ``fused_attention`` would on a contiguous cache of
+    ``max_pages * page_size`` slots, making the output bit-identical
+    to the contiguous-cache kernel (tests/test_serving.py);
+    ``pages_per_chunk`` bounds the gather staging buffer at the cost
+    of one extra rescale per chunk boundary (f32-exact, not bitwise).
+    """
+    from ..dist.ring_dispatch import finalize_partials, merge_partials
+    from ..serving.kv_pages import gather_pages, paged_kv_positions
+
+    b, hq, m, d = q.shape
+    ps = k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q_pos = (lengths.astype(jnp.int32)[:, None] - m
+             + jnp.arange(m, dtype=jnp.int32)[None, :])
+    cpp = (pages_per_chunk if 0 < pages_per_chunk < max_pages
+           else max_pages)
+    pad = (-max_pages) % cpp
+    if pad:
+        page_table = jnp.concatenate(
+            [page_table, jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    state = None
+    for c0 in range(0, page_table.shape[1], cpp):
+        tbl = page_table[:, c0:c0 + cpp]                    # (B, C)
+        kc = gather_pages(k_pages, tbl)
+        vc = gather_pages(v_pages, tbl)
+        kv_pos = paged_kv_positions(tbl, ps, invalid=INVALID_POS,
+                                    first_page=c0)
+        part = fused_attention_partial(
+            q, kc, vc, kv_pos, q_pos, bq=bq, bkv=bkv,
+            causal=True, window=window, scale=scale, interpret=interpret)
+        state = part if state is None else merge_partials(state, part)
+    o, _, l_run = state
+    return finalize_partials(o, l_run, q.dtype)

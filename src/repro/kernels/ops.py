@@ -212,6 +212,58 @@ def attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh, *,
     return choice, plan
 
 
+def paged_attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh,
+                                  *, batch: int, q_heads: int,
+                                  kv_heads: int, q_len: int, kv_len: int,
+                                  head_dim: int, page_size: int,
+                                  v_dim: Optional[int] = None,
+                                  dtype: str = "float32",
+                                  window: int = 0,
+                                  scale: Optional[float] = None,
+                                  interpret: bool = True):
+    """(RegimeChoice, RingPlan|None) for one PAGED decode shape — the
+    serving twin of ``attention_regime_choice`` (docs/serving.md).
+
+    Unlike the dense version this never returns ``(None, None)``: a
+    mesh with no kv split still has the collective-free paged-spatial
+    regime, and serving wants its TunedKernel (and its disk-cache
+    provenance) either way.  Candidates:
+
+    * paged-spatial — batch/heads over the mesh per
+      ``dispatch_mesh_spec`` (or replicated when nothing divides);
+      gathers the full page table per shard; collective-free.
+    * paged-ring — page-table columns over tp-or-model
+      (``dist.ring_dispatch.paged_ring_decode_attention``); each shard
+      gathers only its slice of the pages, paying the partial-softmax
+      combine.  Offered only when the axis splits ``kv_len`` at PAGE
+      granularity — the dispatcher shards whole table columns, so a
+      page count the axis cannot divide must not be priced as ring
+      (the execution would silently fall back to the full gather).
+
+    Both are tuned through ``api.fuse_attention_paged`` so the ranking
+    includes each regime's own localized paged-gather term and the
+    outcomes persist under the paged cache fingerprint.
+    """
+    v_dim = head_dim if v_dim is None else v_dim
+    spec, baxes, hax = dispatch_mesh_spec(
+        rules, mesh, kind="attention", batch=batch,
+        feature_dims=(kv_heads, q_heads))
+    plan = ring_dispatch.plan_ring_attention(
+        rules, mesh, batch=batch, kv_len=kv_len,
+        feature_dims=(kv_heads, q_heads))
+    if plan is not None and (kv_len % page_size
+                             or (kv_len // page_size) % plan.n_shards):
+        plan = None
+    regimes = {"paged-spatial": spec if (baxes or hax) else None}
+    if plan is not None:
+        regimes["paged-ring"] = plan.spec
+    choice = api.fuse_attention_paged_regimes(
+        q_len, kv_len, head_dim, v_dim, page_size=page_size,
+        heads=q_heads, batch=batch, dtype=dtype, window=window,
+        scale=scale, regimes=regimes, interpret=interpret)
+    return choice, plan
+
+
 def _attn_body(M, N, D, Dv, heads, batch, dtype, causal, window, scale,
                m, tuned, interp, spec: MeshSpec):
     if m == "ref":

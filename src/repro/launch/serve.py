@@ -3,13 +3,23 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
         --batch 4 --prompt-len 64 --gen 32
 
+Two batching modes (docs/serving.md):
+
+* **fixed** (default) — one batch, every request decodes in lock-step
+  until the longest finishes; the baseline shape.
+* **continuous** (``--continuous``) — the Orca-style
+  ``serving.engine.ServingEngine`` over a paged KV cache: requests are
+  admitted / prefilled / evicted per iteration on a ragged workload,
+  so short requests never strand slot-steps behind long ones.
+
 Sharded serving (regime-aware, docs/design.md §7): with
 ``--shard-model N`` the driver builds a host mesh whose model axis is
 N, threads ``mesh=``/``rules=`` through the model Runtime — decode
 attention then runs the distributed partial-softmax path over the
 seq-sharded KV cache instead of silently using the unsharded path —
-and prints the tuner's spatial-vs-ring regime choice for the prefill
-and full-context attention shapes.  Force host devices first, e.g.::
+and prints the tuner's regime choice (spatial-vs-ring for fixed
+batching; paged-spatial-vs-paged-ring for ``--continuous``).  Force
+host devices first, e.g.::
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --shard-model 4
@@ -17,6 +27,8 @@ and full-context attention shapes.  Force host devices first, e.g.::
 from __future__ import annotations
 
 import argparse
+import contextlib
+import math
 import time
 
 import jax
@@ -140,6 +152,60 @@ def report_attention_regimes(cfg, mesh, rules, *, batch: int,
     return picks
 
 
+def ragged_workload(vocab: int, n_requests: int, prompt_len: int,
+                    gen: int, seed: int = 0) -> list[tuple[np.ndarray, int]]:
+    """Deterministic ragged serving workload: prompt lengths uniform in
+    [prompt_len//2, prompt_len], generation budgets in [1, gen] — the
+    divergence continuous batching exists to absorb."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for _ in range(n_requests):
+        plen = int(rng.randint(max(1, prompt_len // 2), prompt_len + 1))
+        g = int(rng.randint(1, gen + 1))
+        reqs.append((rng.randint(0, vocab, size=plen).astype(np.int32), g))
+    return reqs
+
+
+def make_engine(model, params, *, batch: int, prompt_len: int, gen: int,
+                page_size: int, verbose: bool = True):
+    """A ``ServingEngine`` sized for ``batch`` concurrent requests of
+    up to ``prompt_len + gen`` positions, with ~25% page slack so
+    admission (prompt pages + one decode page of headroom) stays
+    fluid without making preemption unreachable."""
+    from ..serving import ServingEngine
+
+    max_pages = math.ceil((prompt_len + gen) / page_size)
+    n_pages = 1 + batch * (max_pages + 1) + max(1, batch * max_pages // 4)
+    return ServingEngine(model, params, max_batch=batch,
+                         page_size=page_size, n_pages=n_pages,
+                         max_pages_per_seq=max_pages, verbose=verbose)
+
+
+def run_continuous(cfg, model, params, *, batch: int, n_requests: int,
+                   prompt_len: int, gen: int, page_size: int,
+                   mesh=None, seed: int = 0, verbose: bool = True):
+    """Continuous-batching serving of a ragged workload; returns
+    (results, stats).  With a mesh: enters it, places the params, and
+    lets the engine's tuner-priced regime choice decide whether decode
+    attention runs paged-spatial or paged-ring (docs/serving.md)."""
+    if cfg.family == "encdec" or cfg.n_prefix_embeds:
+        raise NotImplementedError(
+            f"--continuous covers decoder-only attention archs without "
+            f"side inputs (docs/serving.md scope); {cfg.name} needs "
+            f"encoder frames / prefix embeddings — serve it fixed-batch")
+    reqs = ragged_workload(cfg.vocab, n_requests, prompt_len, gen, seed)
+    ctx = jax.set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        if mesh is not None:
+            params = jax.device_put(
+                params, S.shardings_for(mesh, model.param_specs()))
+        engine = make_engine(model, params, batch=batch,
+                             prompt_len=prompt_len, gen=gen,
+                             page_size=page_size, verbose=verbose)
+        results, stats = engine.run(reqs)
+    return results, stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b",
@@ -152,10 +218,37 @@ def main(argv=None):
     ap.add_argument("--shard-model", type=int, default=1,
                     help="model-axis size of the host mesh; > 1 serves "
                          "sharded (force host devices via XLA_FLAGS)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a paged KV cache "
+                         "(serving.engine) on a ragged workload")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="ragged-workload size for --continuous "
+                         "(default 4x batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size for --continuous")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=not args.full)
     mesh, rules, rt = sharded_runtime(args.shard_model)
+
+    if args.continuous:
+        model = S.build_model(cfg, rt)
+        params = model.init_params(jax.random.PRNGKey(args.seed))
+        n_requests = args.requests or 4 * args.batch
+        results, stats = run_continuous(
+            cfg, model, params, batch=args.batch, n_requests=n_requests,
+            prompt_len=args.prompt_len, gen=args.gen,
+            page_size=args.page_size, mesh=mesh, seed=args.seed + 1)
+        shard = f" mesh=data{mesh.shape['data']}xmodel{mesh.shape['model']}" \
+            if mesh is not None else ""
+        counts = [len(r.tokens) for r in results]
+        print(f"arch={cfg.name} continuous: {len(results)} requests, "
+              f"{stats['generated']} tokens in {stats['wall_s']:.2f}s "
+              f"({stats['tok_per_s']:.1f} tok/s) regime={stats['regime']} "
+              f"steps={stats['decode_steps']} "
+              f"preempt={stats['preemptions']}{shard}")
+        print(f"per-request generated: {counts}")
+        return results
     model = S.build_model(cfg, rt)
     params = model.init_params(jax.random.PRNGKey(args.seed))
     prompts = jax.random.randint(jax.random.PRNGKey(1),

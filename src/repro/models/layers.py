@@ -87,6 +87,10 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     # align to (..., S, H, Dh): add a heads axis; batch broadcasts freely
+    if positions.ndim > 1:
+        # per-request positions (B, S) -> (B, S, 1, half): exactly one
+        # heads axis (the while-loop below would stop one dim short)
+        cos, sin = cos[..., None, :], sin[..., None, :]
     while cos.ndim < x.ndim - 1:
         cos, sin = cos[..., None, :], sin[..., None, :]
     x1, x2 = x[..., :half], x[..., half:]
@@ -433,6 +437,118 @@ def _positional_attention(q, k, v, rows_pos, kv_pos, causal, window, scale):
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhmn,bhnv->bhmv", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def _paged_positional_attention(q, k, v, rows_pos, kv_pos, window, scale):
+    """``_positional_attention`` with PER-REQUEST position vectors —
+    the paged-decode twin (docs/serving.md).  rows_pos: (B, M) global
+    query positions (-1 = masked row); kv_pos: (B, N) global position
+    of each gathered slot (-1 = unallocated).  Same op sequence as
+    ``_positional_attention``, so a paged cache holding the same
+    context as a contiguous one produces bit-identical output."""
+    s = jnp.einsum("bhmd,bhnd->bhmn", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = kv_pos[:, None, None, :] >= 0
+    mask &= kv_pos[:, None, None, :] <= rows_pos[:, None, :, None]
+    if window > 0:
+        mask &= (kv_pos[:, None, None, :]
+                 > rows_pos[:, None, :, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhmn,bhnv->bhmv", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def paged_attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                          rules: Rules, *, positions: jax.Array,
+                          cache: dict, page_table: jax.Array,
+                          window: Optional[int] = None,
+                          mesh: Optional[jax.sharding.Mesh] = None,
+                          dist_decode: bool = False,
+                          kernel_ops: bool = False,
+                          block: Optional[tuple] = None
+                          ) -> tuple[jax.Array, dict]:
+    """Attention over a paged KV cache (docs/serving.md).
+
+    x: (B, S, D); positions: (B, S) absolute position of each row
+    (-1 = masked: prompt padding or an inactive engine slot); cache:
+    ``{"k_pages", "v_pages"}`` of shape (n_pages, Hkv, page_size, dh)
+    — the shared pool, no batch dim; page_table: (B, max_pages)
+    physical page per logical page (-1 = unallocated).
+
+    Projections/RoPE/GQA are identical to ``attention_block``; the kv
+    write scatters through ``serving.kv_pages.slot_coords`` (masked
+    rows land on the scratch page) and attention runs over the
+    page-table gather with per-request positions.  Serving is causal
+    by construction.  Three bodies, one semantics (docs/design.md §3):
+    the XLA twin (``_paged_positional_attention``), the fused kernel
+    (``kernels.attention.fused_attention_paged``, ``kernel_ops`` /
+    TPU), and the kv-sharded ring regime
+    (``dist.ring_dispatch.paged_ring_decode_attention``) when
+    ``dist_decode`` and a mesh with a model axis that divides the page
+    table are present.
+    """
+    from ..serving import kv_pages as KP
+
+    b, s, d = x.shape
+    dh = cfg.dh
+    win = cfg.window if window is None else window
+    ps = cache["k_pages"].shape[2]
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    phys, off = KP.slot_coords(page_table, positions, ps)
+    cache = {
+        "k_pages": KP.scatter_pages(cache["k_pages"], phys, off, k),
+        "v_pages": KP.scatter_pages(cache["v_pages"], phys, off, v),
+    }
+
+    qt = q.transpose(0, 2, 1, 3)          # (B, Hq, S, dh)
+    qt = constrain(qt, rules, "batch", "tp", None, None)
+    scale = 1.0 / math.sqrt(dh)
+    group = cfg.n_heads // cfg.n_kv_heads
+
+    nm = mesh.shape[rules.model] if (mesh is not None and rules.model) else 1
+    mp = page_table.shape[1]
+    if (dist_decode and rules.enabled and mesh is not None and rules.model
+            and s == 1 and nm > 1 and mp % nm == 0):
+        from ..dist.ring_dispatch import paged_ring_decode_attention
+        bspec = rules.batch_spec(b, mesh)
+        baxes = bspec[0] if len(bspec) else None
+        o = paged_ring_decode_attention(
+            qt, cache["k_pages"], cache["v_pages"], page_table,
+            positions[:, 0], window=win, scale=scale, rules=rules,
+            mesh=mesh, batch_axes=baxes)
+    elif kernel_ops and s == 1 and jax.default_backend() == "tpu":
+        # decode only: the kernel's tail convention needs q rows at
+        # lengths-M..lengths-1, which padded prefill rows violate.
+        # ``block`` carries the regime search's winning tiles, so the
+        # executed schedule is the one the model priced.
+        from ..kernels.attention import fused_attention_paged
+        bq, bkv = block if block is not None else (128, 128)
+        o = fused_attention_paged(qt, cache["k_pages"], cache["v_pages"],
+                                  page_table, positions[:, -1] + 1,
+                                  bq=bq, bkv=bkv, window=win, scale=scale)
+    else:
+        kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
+                        group, axis=1)
+        vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),
+                        group, axis=1)
+        kv_pos = KP.paged_kv_positions(page_table, ps)
+        o = _paged_positional_attention(qt, kk, vv, positions, kv_pos,
+                                        win, scale)
+
+    o = constrain(o, rules, "batch", "tp", None, None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return constrain(out, rules, "batch", "seq", None), cache
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,9 @@ class Runtime:
     # kernels.ops: the MCFuser-tuned kernel, shard_map-dispatched per
     # shard when a mesh is set (docs/design.md §7); off by default —
     # the streaming XLA twin remains the portable path.
+    paged_block: Optional[tuple] = None  # (bq, bkv) tiles the paged
+    # regime search picked — serving.engine threads them so the kernel
+    # path executes the schedule the tuner priced (docs/serving.md).
 
 
 def _layer_types(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
@@ -216,19 +219,28 @@ class LM:
     # ------------------------------------------------------------------
     def _apply_layer(self, kind: str, p: dict, x: jax.Array,
                      positions: jax.Array, cache: Optional[dict],
-                     layer_idx_in_pattern: int) -> tuple[jax.Array, Any]:
+                     layer_idx_in_pattern: int,
+                     page_table: Optional[jax.Array] = None
+                     ) -> tuple[jax.Array, Any]:
         cfg, rt = self.cfg, self.rt
         h = L.apply_norm(p["ln1"], x, cfg)
         if kind == "attn":
             win = cfg.window
             if cfg.rglru is not None:      # hybrid: local-attn layers
                 win = cfg.rglru.local_window
-            mix, new_cache = L.attention_block(
-                p["mix"], h, cfg, rt.rules, positions=positions,
-                cache=cache, window=win, causal=True, bkv=rt.bkv,
-                unroll=rt.unroll, mesh=rt.mesh,
-                dist_decode=rt.dist_decode_attn,
-                kernel_ops=rt.kernel_ops)
+            if cache is not None and "k_pages" in cache:
+                mix, new_cache = L.paged_attention_block(
+                    p["mix"], h, cfg, rt.rules, positions=positions,
+                    cache=cache, page_table=page_table, window=win,
+                    mesh=rt.mesh, dist_decode=rt.dist_decode_attn,
+                    kernel_ops=rt.kernel_ops, block=rt.paged_block)
+            else:
+                mix, new_cache = L.attention_block(
+                    p["mix"], h, cfg, rt.rules, positions=positions,
+                    cache=cache, window=win, causal=True, bkv=rt.bkv,
+                    unroll=rt.unroll, mesh=rt.mesh,
+                    dist_decode=rt.dist_decode_attn,
+                    kernel_ops=rt.kernel_ops)
         elif kind == "mamba":
             mix, new_cache = L.mamba_block(p["mix"], h, cfg, rt.rules,
                                            state=cache, unroll=rt.unroll)
@@ -246,7 +258,9 @@ class LM:
         return x, new_cache
 
     def _run_blocks(self, params: dict, x: jax.Array, positions: jax.Array,
-                    caches: Optional[dict]) -> tuple[jax.Array, Any]:
+                    caches: Optional[dict],
+                    page_table: Optional[jax.Array] = None
+                    ) -> tuple[jax.Array, Any]:
         """Scan the super-block stack, then the tail."""
         cfg, rt = self.cfg, self.rt
         pat, n_super, rem = _layer_types(cfg)
@@ -256,7 +270,8 @@ class LM:
             for i, kind in enumerate(pat):
                 c = layer_caches[i] if layer_caches is not None else None
                 x, nc = self._apply_layer(kind, layer_params[f"b{i}_{kind}"],
-                                          x, positions, c, i)
+                                          x, positions, c, i,
+                                          page_table=page_table)
                 new_caches.append(nc)
             return x, (tuple(new_caches) if layer_caches is not None
                        else None)
@@ -289,7 +304,8 @@ class LM:
         for i, kind in enumerate(rem):
             c = caches["tail"][i] if caches is not None else None
             x, nc = self._apply_layer(kind, params["tail"][i], x,
-                                      positions, c, i)
+                                      positions, c, i,
+                                      page_table=page_table)
             new_tail.append(nc)
         new_caches = (None if caches is None
                       else {"stack": new_stack_caches, "tail": new_tail})
@@ -433,5 +449,85 @@ class LM:
         positions = pos[None].astype(jnp.int32)
         x = self._embed(params, tokens[:, None], positions, None)
         x, cache = self._run_blocks(params, x, positions, cache)
+        logits = self._unembed(params, x)
+        return logits[:, 0], cache
+
+    # ------------------------------------------------------------------
+    # paged serving (docs/serving.md; driven by serving.engine)
+    # ------------------------------------------------------------------
+    def init_paged_cache(self, n_pages: int, page_size: int,
+                         dtype=None) -> dict:
+        """Paged KV cache pytree: the same ``{"stack", "tail"}`` layout
+        as ``init_cache``, but every attention site holds a shared page
+        pool ``(n_pages, n_kv_heads, page_size, dh)`` with NO batch dim
+        — the engine's page tables map requests onto pages, and page 0
+        is the scratch page (``serving.kv_pages``).  Attention-only
+        stacks for now: SSM/hybrid recurrent state is per-request, not
+        per-position, so those blocks need slot-state swapping rather
+        than paging (ROADMAP follow-up)."""
+        cfg = self.cfg
+        pat, n_super, rem = _layer_types(cfg)
+        if any(kind != "attn" for kind in list(pat) + list(rem)):
+            raise NotImplementedError(
+                f"paged serving covers attention-only stacks; "
+                f"{cfg.name} has pattern {cfg.pattern}")
+        if cfg.n_prefix_embeds:
+            raise NotImplementedError(
+                f"paged serving does not thread prefix embeddings yet; "
+                f"{cfg.name} needs n_prefix_embeds={cfg.n_prefix_embeds}")
+        dt = dtype or jnp.dtype(cfg.dtype)
+        shape = (n_pages, cfg.n_kv_heads, page_size, cfg.dh)
+
+        def site():
+            return {"k_pages": jnp.zeros(shape, dt),
+                    "v_pages": jnp.zeros(shape, dt)}
+
+        def stack_site():
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_super,) + a.shape).copy(),
+                site())
+
+        return {"stack": tuple(stack_site() for _ in pat),
+                "tail": [site() for _ in rem]}
+
+    def prefill_paged(self, params: dict, tokens: jax.Array, cache: dict,
+                      page_table: jax.Array, length: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+        """One request's prefill into its pages.
+
+        tokens: (1, S) prompt padded to a page multiple; ``length``
+        (int32 scalar, traceable) is the real prompt length — padding
+        rows get position -1, so their kv lands on the scratch page and
+        their logits are never read.  Attention runs over the full
+        page-table gather (the same N as every later decode step, so
+        prefill and decode see bit-identical softmax geometry).
+        Returns (logits of the last REAL token (1, V), cache)."""
+        b, s = tokens.shape
+        ar = jnp.arange(s, dtype=jnp.int32)
+        positions = jnp.broadcast_to(
+            jnp.where(ar < length, ar, -1)[None, :], (b, s))
+        x = self._embed(params, tokens, jnp.clip(positions, 0), None)
+        x, cache = self._run_blocks(params, x, positions, cache,
+                                    page_table=page_table)
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.clip(length - 1, 0), 1, axis=1)
+        logits = self._unembed(params, x)
+        return logits[:, 0], cache
+
+    def decode_step_paged(self, params: dict, cache: dict,
+                          tokens: jax.Array, positions: jax.Array,
+                          page_table: jax.Array
+                          ) -> tuple[jax.Array, dict]:
+        """One ragged decode step over the whole slot batch.
+
+        tokens: (B,) last emitted token per slot; positions: (B,)
+        absolute position each slot writes this step — i.e. its
+        current context length (-1 = inactive slot: kv goes to the
+        scratch page, logits are garbage and ignored); page_table:
+        (B, max_pages).  Returns (logits (B, V), cache)."""
+        pos2 = positions.astype(jnp.int32)[:, None]
+        x = self._embed(params, tokens[:, None], jnp.clip(pos2, 0), None)
+        x, cache = self._run_blocks(params, x, pos2, cache,
+                                    page_table=page_table)
         logits = self._unembed(params, x)
         return logits[:, 0], cache

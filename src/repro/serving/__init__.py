@@ -1,0 +1,20 @@
+"""Continuous-batching serving engine on a paged KV cache
+(docs/serving.md).
+
+``kv_pages``  — fixed-size KV pages, per-request page tables, and the
+                host-side free-list allocator (alloc on admission /
+                growth, reclaim on completion).
+``engine``    — the Orca-style iteration scheduler: admit from the
+                request queue each step, prefill new requests, decode
+                every running request in one ragged batch, evict
+                finished ones.
+
+The paged attention itself lives with its siblings:
+``kernels/attention.py::fused_attention_paged`` (the tuned Pallas
+kernel), ``models/layers.py::paged_attention_block`` (the XLA twin the
+CPU engine runs), and ``dist/ring_dispatch.py::
+paged_ring_decode_attention`` (the kv-sharded regime) — priced against
+each other by ``core.api.fuse_attention_paged_regimes``.
+"""
+from .engine import FinishedRequest, ServingEngine  # noqa: F401
+from .kv_pages import PagePool, RequestPages  # noqa: F401

@@ -1,0 +1,374 @@
+"""Orca-style continuous-batching scheduler over the paged KV cache
+(docs/serving.md).
+
+One ``step()`` is one scheduler iteration:
+
+1. **admit** — pop FIFO requests into free batch slots while the page
+   pool can cover their prompt plus one page of decode headroom, and
+   prefill each (batch-1, padded to a page multiple) straight into its
+   freshly allocated pages;
+2. **decode** — every running request advances one token in a single
+   ragged batched ``decode_step_paged`` call (inactive slots ride along
+   masked: position -1, kv to the scratch page, logits ignored);
+3. **evict** — requests that hit their token budget (or ``eos_id``)
+   free their pages back to the pool and leave the batch.
+
+Iteration-level scheduling is what makes the batch *continuous*: a
+finished request's slot and pages are reusable on the very next step,
+so ragged generation lengths never strand slot-steps the way
+fixed-batch serving does (benchmarks/bench_serving.py measures the
+gap).  Under memory pressure the **newest** running request is
+preempted and requeued for recompute (its prompt plus
+tokens-generated-so-far become the new prompt) — freeing the most
+recently allocated pages first, the standard vLLM-style policy.
+
+The regime the decode attention runs under is a tuner decision, as
+everywhere else in this repo: at construction the engine prices
+paged-spatial vs paged-ring for its decode shape
+(``kernels.ops.paged_attention_regime_choice``, persistent-cached) and
+enables the kv-sharded ring path only when the model ranks it fastest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kv_pages as KP
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """One completed request, in submission order from ``run()``."""
+
+    rid: int
+    prompt_len: int
+    tokens: list[int]            # generated tokens (may be < requested
+    submit_step: int             # budget when eos_id fired)
+    finish_step: int
+    n_preempted: int = 0
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    prompt: np.ndarray           # original prompt ++ recomputed tokens
+    base_prompt_len: int
+    done: list[int]
+    max_new: int
+    submit_step: int
+    n_preempted: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    prompt: np.ndarray           # original prompt (++ recomputed tokens
+    base_prompt_len: int         # after a preemption)
+    generated: list[int]
+    max_new: int
+    alloc: KP.RequestPages
+    submit_step: int
+    admit_seq: int               # preemption order: newest goes first
+    n_preempted: int = 0
+    n_done_admit: int = 0        # generated tokens already inside
+    #                              ``prompt`` (recompute re-prefilled them)
+
+    @property
+    def pos(self) -> int:
+        """Absolute position the next decode step writes: kv holds the
+        prompt plus every post-admission token except the newest
+        (whose kv is written by the step that consumes it).  Tokens
+        re-prefilled after a preemption live in ``prompt`` AND
+        ``generated`` — count them once."""
+        return (len(self.prompt) + len(self.generated)
+                - self.n_done_admit - 1)
+
+
+class ServingEngine:
+    """Continuous-batching serving over a paged KV cache.
+
+    model/params: an attention-only ``models.lm.LM`` and its weights
+    (sharded by the caller when a mesh is ambient — run ``step()`` /
+    ``run()`` inside ``jax.set_mesh`` then, as ``launch.serve`` does).
+    max_batch: decode slot count (the ragged batch width).
+    page_size / n_pages: the pool (page 0 is scratch, so ``n_pages - 1``
+    are allocatable).  max_pages_per_seq: page-table width; a request
+    may span at most ``max_pages_per_seq * page_size`` positions.
+    """
+
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 page_size: int = 16, n_pages: int = 64,
+                 max_pages_per_seq: int = 8,
+                 eos_id: Optional[int] = None,
+                 choose_regime: bool = True, verbose: bool = False):
+        self.params = params
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.n_ctx = max_pages_per_seq * page_size
+        self.eos_id = eos_id
+        self.verbose = verbose
+        self.pool = KP.PagePool(n_pages, page_size)
+        self.queue: list[_Pending] = []
+        self.slots: list[Optional[_Slot]] = [None] * max_batch
+        self.finished: list[FinishedRequest] = []
+        self.step_no = 0
+        self._next_rid = 0
+        self._admit_seq = 0
+        self.stats = {"decode_steps": 0, "prefills": 0, "preemptions": 0,
+                      "generated": 0, "slot_steps": 0, "active_steps": 0,
+                      "ctx_tokens": 0, "page_slot_steps": 0}
+        self.regime, self.regime_source, self.regime_times, tiles = \
+            self._choose_regime(model) if choose_regime else \
+            ("paged-spatial", None, {}, None)
+        rt = model.rt
+        want_ring = self.regime == "paged-ring"
+        if (rt.dist_decode_attn != want_ring and rt.mesh is not None) \
+                or tiles != rt.paged_block:
+            # the tuner's decision is authoritative in BOTH directions:
+            # enable the kv-sharded decode path when paged-ring wins,
+            # disable it when the collective-free regime does, and
+            # thread the winning (bq, bkv) tiles so the kernel path
+            # executes the schedule the model priced.  The model is a
+            # stateless wrapper — rebuilding is free.
+            model = type(model)(model.cfg, dataclasses.replace(
+                rt, dist_decode_attn=want_ring and rt.mesh is not None,
+                paged_block=tiles))
+        self.model = model
+        self.cache = model.init_paged_cache(n_pages, page_size)
+        self._decode = jax.jit(model.decode_step_paged)
+        self._prefill = jax.jit(model.prefill_paged)
+
+    # ------------------------------------------------------------------
+    def _choose_regime(self, model):
+        """(regime, cache source, times, (bq, bkv)) for this engine's
+        decode shape (q=1 row over the full ``n_ctx`` paged context) —
+        served from the persistent schedule cache on warm starts."""
+        from ..kernels import ops
+        cfg, rt = model.cfg, model.rt
+        if rt.mesh is None or not rt.rules.enabled:
+            from ..core import api
+            tk = api.fuse_attention_paged(
+                1, self.n_ctx, cfg.dh, cfg.dh, page_size=self.page_size,
+                heads=cfg.n_heads, batch=self.max_batch,
+                dtype=str(jnp.dtype(cfg.dtype)), causal=True)
+            if self.verbose:
+                print(f"paged regime[decode q=1 kv={self.n_ctx}]: "
+                      f"paged-spatial (no mesh; "
+                      f"{tk.report.best_time * 1e6:.1f}us, "
+                      f"schedule from {tk.source})")
+            return "paged-spatial", tk.source, \
+                {"paged-spatial": tk.report.best_time}, \
+                (tk.params.bq, tk.params.bkv)
+        choice, _ = ops.paged_attention_regime_choice(
+            rt.rules, rt.mesh, batch=self.max_batch,
+            q_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads, q_len=1,
+            kv_len=self.n_ctx, head_dim=cfg.dh,
+            page_size=self.page_size,
+            dtype=str(jnp.dtype(cfg.dtype)))
+        src = choice.kernel.source
+        if self.verbose:
+            times = " ".join(f"{k}={v * 1e6:.1f}us"
+                             for k, v in choice.times.items())
+            print(f"paged regime[decode q=1 kv={self.n_ctx}]: "
+                  f"{choice.regime} ({times}; schedule from {src})")
+        return choice.regime, src, dict(choice.times), \
+            (choice.kernel.params.bq, choice.kernel.params.bkv)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new: int) -> int:
+        """Queue one request; returns its id.  Validated against the
+        engine's hard geometry so admission can never dead-lock — the
+        pool must cover the WORST-CASE re-admission after a preemption
+        (recompute prompt = prompt ++ up to ``max_new - 1`` generated
+        tokens, plus the one-page admission headroom), not just the
+        request's total footprint."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1: greedy serving "
+                             "always emits the prefill's first token")
+        total = len(prompt) + max_new
+        if total > self.n_ctx:
+            raise ValueError(
+                f"prompt {len(prompt)} + gen {max_new} = {total} "
+                f"exceeds n_ctx {self.n_ctx}")
+        worst = math.ceil((total - 1) / self.page_size) + 1
+        if worst > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request needs up to {worst} pages after a recompute "
+                f"but the pool holds {self.pool.n_pages - 1}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Pending(rid, prompt, len(prompt), [], max_new,
+                                   self.step_no))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit_one(self) -> bool:
+        """Admission policy (docs/serving.md): FIFO head-of-line; the
+        head is admitted iff a slot is free AND the pool covers its
+        prompt pages plus the slot its first decode token writes —
+        allocated UP FRONT, so a freshly admitted request can never be
+        the same step's preemption victim (``step()`` grows the
+        already-running slots before admitting)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not self.queue or not free:
+            return False
+        pend = self.queue[0]
+        plen = len(pend.prompt)
+        if self.pool.n_free < math.ceil((plen + 1) / self.page_size):
+            return False
+        self.queue.pop(0)
+        alloc = KP.RequestPages()
+        if not alloc.ensure(plen + 1, self.pool):
+            raise RuntimeError("admission raced the free list")  # can't
+            # happen: n_free was checked above and step() is single-
+            # threaded, but allocation must never hide in an assert
+        s_pad = math.ceil(plen / self.page_size) * self.page_size
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :plen] = pend.prompt
+        table = jnp.asarray(KP.table_array([alloc], self.max_pages))
+        logits, self.cache = self._prefill(
+            self.params, jnp.asarray(toks), self.cache, table,
+            jnp.int32(plen))
+        tok = int(jnp.argmax(logits[0]))
+        slot = _Slot(pend.rid, pend.prompt, pend.base_prompt_len,
+                     pend.done + [tok], pend.max_new, alloc,
+                     pend.submit_step, self._admit_seq,
+                     pend.n_preempted, n_done_admit=len(pend.done))
+        self._admit_seq += 1
+        self.slots[free[0]] = slot
+        self.stats["prefills"] += 1
+        self._maybe_finish(free[0])
+        return True
+
+    def _preempt(self, idx: int) -> None:
+        """Requeue slot ``idx`` for recompute: its pages go back to the
+        pool and its prompt ++ generated tokens become the new prompt
+        (greedy decode is deterministic, so the continuation picks up
+        where it left off).  Only post-admission tokens are appended —
+        after an earlier preemption ``prompt`` already ends with the
+        first ``n_done_admit`` generated tokens."""
+        slot = self.slots[idx]
+        slot.alloc.release(self.pool)
+        fresh = slot.generated[slot.n_done_admit:]
+        self.queue.insert(0, _Pending(
+            slot.rid,
+            np.concatenate([slot.prompt, np.asarray(fresh, np.int32)]),
+            slot.base_prompt_len, list(slot.generated), slot.max_new,
+            slot.submit_step, slot.n_preempted + 1))
+        self.slots[idx] = None
+        self.stats["preemptions"] += 1
+
+    def _maybe_finish(self, idx: int) -> None:
+        slot = self.slots[idx]
+        done_n = len(slot.generated)
+        hit_eos = (self.eos_id is not None and done_n
+                   and slot.generated[-1] == self.eos_id)
+        if done_n >= slot.max_new or hit_eos:
+            slot.alloc.release(self.pool)
+            self.finished.append(FinishedRequest(
+                slot.rid, slot.base_prompt_len, list(slot.generated),
+                slot.submit_step, self.step_no, slot.n_preempted))
+            self.slots[idx] = None
+            self.stats["generated"] += done_n
+
+    def _grow_or_preempt(self) -> list[int]:
+        """Every active slot gets capacity for the position it is about
+        to write, preempting newest-first under pressure."""
+        while True:
+            active = [i for i, s in enumerate(self.slots)
+                      if s is not None]
+            blocked = [i for i in active
+                       if not self.slots[i].alloc.ensure(
+                           self.slots[i].pos + 1, self.pool)]
+            if not blocked:
+                return active
+            victim = max(active, key=lambda i: self.slots[i].admit_seq)
+            self._preempt(victim)
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[FinishedRequest]:
+        """One scheduler iteration; returns requests finished in it."""
+        n_done = len(self.finished)
+        self.step_no += 1
+        # running slots take their growth pages BEFORE admission sees
+        # the free count, and admission reserves each fresh request's
+        # first decode slot — so the second growth pass below can only
+        # preempt on genuine cross-step pressure, never a request
+        # admitted this step
+        self._grow_or_preempt()
+        admitted = False
+        while self._admit_one():
+            admitted = True
+        active = self._grow_or_preempt()
+        if not active:
+            if self.queue and not admitted:
+                raise RuntimeError(
+                    "scheduler stalled: pool cannot cover the queue "
+                    "head even when idle — shrink prompts or grow "
+                    "n_pages")
+            return self.finished[n_done:]
+
+        tokens = np.zeros((self.max_batch,), np.int32)
+        positions = np.full((self.max_batch,), -1, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].generated[-1]
+            positions[i] = self.slots[i].pos
+        table = jnp.asarray(KP.table_array(
+            [s.alloc if s is not None else None for s in self.slots],
+            self.max_pages))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), table)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats["decode_steps"] += 1
+        self.stats["slot_steps"] += self.max_batch
+        self.stats["active_steps"] += len(active)
+        for i in active:
+            slot = self.slots[i]
+            self.stats["ctx_tokens"] += slot.pos + 1
+            self.stats["page_slot_steps"] += len(slot.alloc.pages)
+            slot.generated.append(int(nxt[i]))
+            self._maybe_finish(i)
+        return self.finished[n_done:]
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Zero the counters between ``run()`` calls (benchmarks warm
+        the compiled steps with a throwaway workload first).  Only
+        legal when idle — every page is back in the pool."""
+        if self.queue or any(s is not None for s in self.slots):
+            raise RuntimeError("reset() while requests are in flight")
+        assert self.pool.n_free == self.pool.n_pages - 1
+        self.finished = []
+        self.step_no = 0
+        self._next_rid = 0
+        for k in self.stats:
+            self.stats[k] = 0
+
+    def run(self, requests) -> tuple[list[FinishedRequest], dict]:
+        """Drive ``step()`` until every submitted request finishes.
+
+        requests: iterable of (prompt, max_new).  Returns results in
+        submission order plus a stats dict (wall seconds, tokens/s, and
+        the step counters).
+        """
+        for prompt, max_new in requests:
+            self.submit(prompt, max_new)
+        t0 = time.perf_counter()
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+        dt = time.perf_counter() - t0
+        out = sorted(self.finished, key=lambda r: r.rid)
+        stats = dict(self.stats)
+        stats["wall_s"] = dt
+        stats["tok_per_s"] = stats["generated"] / dt if dt > 0 else 0.0
+        stats["regime"] = self.regime
+        return out, stats
