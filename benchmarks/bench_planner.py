@@ -1,0 +1,110 @@
+"""Planner-vs-hand-wired pricing + planning wall-clock (core/planner.py).
+
+The graph-level fusion planner must never *lose* to the hand-wired
+layout it replaces: ``price_plan`` demotes a fused chain whenever the
+tuner's eq (2') time does not beat the unfused alternative, so the
+planner's priced block time is <= the hand-wired block's by
+construction.  This benchmark reports, per plannable config:
+
+  * plan_cold_ms   — wall-clock of carve + stitch (first plan)
+  * plan_warm_ms   — replay from the in-process memo / disk record
+  * planner_us     — priced per-block time of the planner layout
+  * hand_us        — priced per-block time of the hand-wired layout
+                     (fused attention, unfused MLP, standalone glue)
+  * speedup        — hand_us / planner_us
+  * n_fused / n_stitched — carve/stitch decision counts
+
+``--smoke`` (wired into ``benchmarks/run.py --smoke``) is the
+asserting CI lane: pricing must not regress below hand-wired on any
+plannable config, and planning must stay interactive (< 1 s a plan —
+the paper's "rapid" axis; MCFuser plans in seconds, not hours).
+"""
+import argparse
+import sys
+import time
+
+from repro.configs import ARCHS, get_config
+from repro.core import planner
+
+from ._util import isolated_schedule_cache
+
+SMOKE_PLAN_BUDGET_S = 1.0   # cold carve+stitch per config (generous:
+#                             shared CI runners; real cost is ~2 ms)
+
+# priced at the differential harness's FULL shape (tests/golden_plans)
+BATCH, SEQ = 1, 512
+
+
+def _plannable_archs():
+    return [a for a in ARCHS if planner.plannable(get_config(a))]
+
+
+def _row(arch: str) -> dict:
+    cfg = get_config(arch)
+    planner.clear_memo()
+    t0 = time.perf_counter()
+    plan = planner.plan_model(cfg, BATCH, SEQ)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    planner.plan_model(cfg, BATCH, SEQ)
+    warm = time.perf_counter() - t0
+    price = planner.price_plan(plan, cfg)
+    return {
+        "name": f"planner_{arch}",
+        "arch": arch,
+        "plan_cold_ms": round(cold * 1e3, 3),
+        "plan_warm_ms": round(warm * 1e3, 4),
+        "planner_us": round(price["planner_seconds"] * 1e6, 3),
+        "hand_us": round(price["hand_seconds"] * 1e6, 3),
+        "speedup": round(price["hand_seconds"]
+                         / price["planner_seconds"], 4),
+        "n_fused": sum(1 for c in plan.layer.chains if c.fused),
+        "n_split": sum(1 for c in plan.layer.chains if not c.fused),
+        "n_stitched": len(plan.layer.stitched()),
+        "demoted": sorted(k for k, v in price["chains"].items()
+                          if v.get("demoted")),
+    }
+
+
+def main():
+    rows = []
+    for arch in _plannable_archs():
+        r = _row(arch)
+        rows.append(r)
+        print(f"{r['name']},{r['planner_us']},"
+              f"hand_us={r['hand_us']} speedup={r['speedup']} "
+              f"plan_cold_ms={r['plan_cold_ms']} "
+              f"n_fused={r['n_fused']} n_stitched={r['n_stitched']}")
+    return rows
+
+
+def smoke() -> int:
+    """CI lane: planner pricing must never regress below hand-wired,
+    and planning must stay rapid."""
+    rc = 0
+    for arch in _plannable_archs():
+        r = _row(arch)
+        ok_price = r["planner_us"] <= r["hand_us"] * (1 + 1e-9)
+        ok_time = r["plan_cold_ms"] / 1e3 <= SMOKE_PLAN_BUDGET_S
+        status = "ok" if (ok_price and ok_time) else "FAIL"
+        print(f"# [{status}] {arch}: planner={r['planner_us']}us "
+              f"hand={r['hand_us']}us (x{r['speedup']}) "
+              f"plan={r['plan_cold_ms']}ms warm={r['plan_warm_ms']}ms",
+              file=sys.stderr)
+        if not ok_price:
+            print(f"# FAIL {arch}: planner prices worse than hand-wired",
+                  file=sys.stderr)
+            rc = 1
+        if not ok_time:
+            print(f"# FAIL {arch}: planning exceeded "
+                  f"{SMOKE_PLAN_BUDGET_S}s", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    with isolated_schedule_cache():
+        sys.exit(smoke() if args.smoke else (main() and 0))

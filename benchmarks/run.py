@@ -40,22 +40,26 @@ def main(argv=None) -> None:
                     help="CI lane: asserting subset only — tuning-time "
                          "budgets/engine parity (bench_tuning_time), "
                          "the mesh regime sweep incl. the ring-attention "
-                         "crossover (bench_mesh_tuning), and the "
+                         "crossover (bench_mesh_tuning), the "
                          "continuous-batching scheduler + paged regime "
-                         "warm start (bench_serving); writes no JSON")
+                         "warm start (bench_serving), and the fusion "
+                         "planner's pricing floor (bench_planner); "
+                         "writes no JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import bench_mesh_tuning, bench_serving, bench_tuning_time
+        from . import (bench_mesh_tuning, bench_planner, bench_serving,
+                       bench_tuning_time)
         with isolated_schedule_cache():
             rc = bench_tuning_time.smoke()
             rc = bench_mesh_tuning.smoke() or rc
             rc = bench_serving.smoke() or rc
+            rc = bench_planner.smoke() or rc
         sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,
                    bench_gemm_chain, bench_mesh_tuning,
-                   bench_model_accuracy, bench_serving,
+                   bench_model_accuracy, bench_planner, bench_serving,
                    bench_tuning_time, roofline)
 
     rows_by_mod: dict[str, list] = {}
@@ -69,6 +73,8 @@ def main(argv=None) -> None:
             (bench_mesh_tuning, "mesh-aware tuning (docs/tuning.md)"),
             (bench_serving, "continuous vs fixed batching "
                             "(docs/serving.md)"),
+            (bench_planner, "planner vs hand-wired pricing "
+                            "(docs/planner.md)"),
             (bench_model_accuracy, "Figs 10-11"),
             (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
             (roofline, "Roofline summary (dry-run artifacts)"),

@@ -30,7 +30,7 @@ from typing import Callable, Optional
 import jax
 
 from . import codegen, schedule_cache
-from .chain import Chain, attention_chain, gemm_chain
+from .chain import Chain, attention_chain, gemm_chain, mlp_chain
 from .dag import build_schedule
 from .perf_model import MeshSpec, TpuSpec, V5E, paged_gather_seconds
 from .search import SearchReport, heuristic_search, rank_regimes
@@ -135,6 +135,46 @@ def fuse_gemm_chain(M: int, N: int, K: int, H: int, batch: int = 1,
     from ..kernels.gemm_chain import fused_gemm_chain as kernel
 
     fn = functools.partial(kernel, interpret=interp, **params.as_kwargs())
+    tk = TunedKernel(fn, report, params, dt, source=source)
+    _CACHE[key] = tk
+    return tk
+
+
+def fuse_mlp_chain(M: int, FF: int, D: int, batch: int = 1,
+                   dtype: str = "float32", gated: bool = True,
+                   act: str = "silu", hw: TpuSpec = V5E,
+                   mesh: Optional[MeshSpec] = None,
+                   interpret: Optional[bool] = None,
+                   unit: int = 128, seed: int = 0,
+                   measure_fn=None) -> TunedKernel:
+    """Tune and build the fused (gated) MLP chain kernel
+    E = (act(A@Wg) * (A@Wu)) @ Wd — the chain ``core.planner`` carves
+    for the memory-bound MLP half of a transformer block.
+
+    (M, FF, D) are tokens, d_ff and d_model; the loop structure matches
+    ``fuse_gemm_chain`` so the same schedule classes, pruning rules and
+    cache machinery apply.  Entries persist under the distinct "mlp"
+    key prefix, so they never collide with plain gemm-chain entries of
+    the same dims.
+    """
+    interp = (not _is_tpu()) if interpret is None else interpret
+    trial = "measured" if measure_fn is not None else "analytic"
+    key = ("mlp", M, FF, D, batch, gated, act, dtype, hw.name, unit,
+           mesh, interp, seed, trial)
+    if key in _CACHE:
+        return _CACHE[key]
+    chain = mlp_chain(M, FF, D, batch=batch, dtype=dtype, gated=gated,
+                      act=act)
+    disk_key = ("mlp", M, FF, D, batch, gated, act, dtype, hw.name, unit,
+                mesh.canonical() if mesh is not None else None, seed)
+    report, params, dt, source = _tune_or_load(
+        "mlp", chain, hw, mesh, unit, seed, disk_key,
+        measure_fn=measure_fn)
+
+    from ..kernels.gemm_chain import fused_mlp_chain as kernel
+
+    fn = functools.partial(kernel, interpret=interp, act=act,
+                           **params.as_kwargs())
     tk = TunedKernel(fn, report, params, dt, source=source)
     _CACHE[key] = tk
     return tk

@@ -208,6 +208,45 @@ def attention_chain(M: int, N: int, K: int, H: int, heads: int = 1,
     return Chain(name, loops, tensors, ops, batch=batch * heads)
 
 
+def mlp_chain(M: int, FF: int, D: int, batch: int = 1,
+              dtype: str = "float32", gated: bool = True,
+              act: str = "silu", name: str = "mlp_chain") -> Chain:
+    """Transformer MLP as a 2-GEMM chain with a gated-activation epilogue:
+
+        Hh[m,n] = act(A[m,k] @ Wg[k,n]) * (A[m,k] @ Wu[k,n])   (gated)
+        Hh[m,n] = act(A[m,k] @ Wu[k,n])                        (ungated)
+        E[m,h]  = Hh[m,n] @ Wd[n,h]
+
+    Loop naming follows ``gemm_chain`` (m = tokens, n = d_ff, k = h =
+    d_model) so the whole tiling/pruning/search stack applies
+    unchanged.  The gated variant reads one extra input (Wg) and pays
+    4 flops per reduction point (two MACs); the activation itself is a
+    memory-intensive epilogue attached to the up-projection, exactly
+    like online_softmax on the attention chain — it never becomes a
+    cross-tile op.  This is the chain ``core.planner`` carves for the
+    MLP half of a transformer block.
+    """
+    loops = {"m": M, "n": FF, "k": D, "h": D}
+    tensors = {
+        "A": TensorSpec("A", ("m", "k"), dtype),
+        "Wu": TensorSpec("Wu", ("k", "n"), dtype),
+        "Hh": TensorSpec("Hh", ("m", "n"), dtype),
+        "Wd": TensorSpec("Wd", ("n", "h"), dtype),
+        "E": TensorSpec("E", ("m", "h"), dtype),
+    }
+    ins: tuple[str, ...] = ("A", "Wu")
+    if gated:
+        tensors["Wg"] = TensorSpec("Wg", ("k", "n"), dtype)
+        ins = ("A", "Wu", "Wg")
+    ops = (
+        OpSpec("mlp_up", "Hh", ins, ("k",),
+               epilogue=(f"gated_{act}" if gated else act),
+               flops_per_point=4 if gated else 2),
+        OpSpec("mlp_down", "E", ("Hh", "Wd"), ("n",)),
+    )
+    return Chain(name, loops, tensors, ops, batch=batch)
+
+
 def single_gemm(M: int, N: int, K: int, batch: int = 1,
                 dtype: str = "float32", name: str = "gemm") -> Chain:
     """One GEMM C[m,n] = A[m,k] @ B[k,n] — the unfused-baseline unit:

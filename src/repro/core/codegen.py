@@ -64,6 +64,10 @@ def to_attention_params(sched: Schedule) -> AttentionParams:
 PARAMS_BY_KIND = {
     "gemm": to_gemm_chain_params,
     "attn": to_attention_params,
+    # chain.mlp_chain shares the gemm-chain loop structure (m,n,k,h), so
+    # the tuned schedule maps onto kernels.gemm_chain.fused_mlp_chain
+    # through the same extractor.
+    "mlp": to_gemm_chain_params,
 }
 
 

@@ -56,6 +56,38 @@ def rule3_padding_ok(dim: int, tile: int, unit: int = 128,
     return (padded - dim) / dim < max_ratio
 
 
+def stitched_vmem_ok(chain: Chain, extra_bytes: int, hw: TpuSpec = V5E,
+                     unit: int = 128,
+                     full_loops: tuple = ()) -> bool:
+    """Rule-4 extension for FusionStitching (core/planner.py).
+
+    A stitched prologue/epilogue makes extra operand tiles resident in
+    EVERY schedule of the chain — the residual-stream tile of a fused
+    residual add, the cos/sin table slice of a fused rope, a norm's
+    scale vector.  The stitch is only admissible if the chain's
+    *smallest* legal tile residency (every loop clamped to ``unit``,
+    double-buffered like ``perf_model.vmem_estimate``) still leaves
+    room for those ``extra_bytes`` inside the Rule-4 budget; otherwise
+    no schedule at all survives with the stitch attached and the glue
+    must stay a standalone XLA op.  Checking the floor rather than a
+    tuned schedule keeps the gate schedule-independent, so the planner
+    can decide stitches before any search has run.
+
+    ``full_loops`` names loops the stitch forces to full extent — a
+    glue op that *reduces* over a chain loop (a norm prologue over the
+    contraction axis, a softmax epilogue over the score row) is only
+    tile-local if that loop is swept untiled, so its floor residency
+    uses the full dimension there instead of ``unit``.
+    """
+    tile = {l: ext if l in full_loops else min(ext, unit)
+            for l, ext in chain.loops.items()}
+    resident = 0
+    for t in chain.tensors.values():
+        resident += math.prod(tile[d] for d in t.dims) * t.dtype_bytes
+    resident *= hw.pipeline_stages
+    return resident + extra_bytes <= hw.vmem_slack * hw.vmem_bytes
+
+
 def iter_tile_assignments(chain: Chain, unit: int = 128,
                           rule3: bool = False) -> Iterator[dict[str, int]]:
     names = list(chain.loops)

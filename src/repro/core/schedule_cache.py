@@ -189,6 +189,75 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
         return None
 
 
+# ---------------------------------------------------------------------------
+# Planner-decision records (core/planner.py)
+# ---------------------------------------------------------------------------
+#
+# The graph-level fusion planner persists its carve/stitch decisions in
+# the same store, under a dedicated ``"plan"`` fingerprint component —
+# the planner analogue of the "analytic"/"measured" trial kinds, so a
+# plan record can never satisfy a schedule lookup or vice versa.  The
+# payload is the planner's own JSON form (planner.plan_to_json); this
+# module only frames it with the schema/key cross-checks every other
+# record gets.  Same invalidation story: SCHEMA_VERSION, MODEL_VERSION
+# and the hardware constants are folded into the path hash, and the
+# caller's key carries PLANNER_VERSION.
+
+def plan_entry_path(key: tuple, hw: TpuSpec) -> Path:
+    blob = json.dumps([list(key), model_fingerprint(hw), "plan"],
+                      sort_keys=True, default=str)
+    return cache_dir() / (sha256(blob.encode()).hexdigest()[:32] + ".json")
+
+
+def load_plan(key: tuple, hw: TpuSpec) -> Optional[dict]:
+    """The persisted planner decision for ``key``, or None on
+    miss/corruption.  Returns the raw plan payload dict."""
+    if not enabled():
+        return None
+    path = plan_entry_path(key, hw)
+    try:
+        with open(path, encoding="utf-8") as f:
+            rec = json.load(f)
+        if rec["schema"] != SCHEMA_VERSION:
+            return None
+        if rec["kind"] != "plan":
+            return None
+        if rec["key"] != _jsonable_key(key):
+            return None  # hash collision paranoia
+        return dict(rec["plan"])
+    except FileNotFoundError:
+        return None
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return None  # corrupt / truncated / foreign file: treat as miss
+
+
+def store_plan(key: tuple, hw: TpuSpec, plan: dict) -> Optional[Path]:
+    """Persist one planner decision; best-effort like ``store``."""
+    if not enabled():
+        return None
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "model_fingerprint": model_fingerprint(hw),
+        "kind": "plan",
+        "key": _jsonable_key(key),
+        "plan": plan,
+    }
+    path = plan_entry_path(key, hw)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(rec, f)
+            os.replace(tmp, path)  # atomic, as in store()
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+    except OSError:
+        return None
+
+
 def clear() -> int:
     """Delete every cache entry; returns the number removed.
 

@@ -30,7 +30,14 @@ INVALID_POS = 1 << 30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
-                 n_kv_blocks, bq, bkv, offset, causal, window, scale):
+                 n_kv_blocks, bq, bkv, offset, causal, window, scale,
+                 q_prologue=None, k_prologue=None, o_epilogue=None):
+    """``q_prologue``/``k_prologue``/``o_epilogue`` are the
+    FusionStitching hook points (core/planner.py): tile-local
+    elementwise expressions applied to the q/k tiles at load and to the
+    normalized o tile before the store, so memory-bound glue around the
+    attention chain (head norms, rotations, output scaling) rides
+    inside the kernel instead of paying an HBM round trip."""
     j = pl.program_id(3)
 
     @pl.when(j == 0)
@@ -41,6 +48,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
 
     q = q_ref[0, 0]                       # (bq, d)
     k = k_ref[0, 0]                       # (bkv, d)
+    if q_prologue is not None:
+        q = q_prologue(q)
+    if k_prologue is not None:
+        k = k_prologue(k)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale  # (bq, bkv)
@@ -72,7 +83,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, o_acc, m_sc, l_sc, *,
     def _():
         l = l_sc[:, :1]
         l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows
-        o_ref[0, 0] = (o_acc[...] / l).astype(o_ref.dtype)
+        o = o_acc[...] / l
+        if o_epilogue is not None:
+            o = o_epilogue(o)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
 
 
 def _attn_partial_kernel(q_ref, k_ref, v_ref, pos_ref, qpos_ref,
@@ -236,16 +250,20 @@ def fused_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "bq", "bkv", "causal", "window", "scale", "interpret"))
+    "bq", "bkv", "causal", "window", "scale", "interpret",
+    "q_prologue", "k_prologue", "o_epilogue"))
 def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     bq: int = 128, bkv: int = 128,
                     causal: bool = False, window: int = 0,
                     scale: float | None = None,
+                    q_prologue=None, k_prologue=None, o_epilogue=None,
                     interpret: bool = False) -> jax.Array:
     """O = softmax(Q K^T * scale + mask) V, fused, GQA-aware.
 
     q: (B, Hq, M, D), k/v: (B, Hkv, N, D/Dv); Hq % Hkv == 0.
     Queries sit at the *tail* of the kv sequence (decode-compatible).
+    ``q_prologue``/``k_prologue``/``o_epilogue``: optional tile-local
+    elementwise stitching hooks (see ``_attn_kernel``).
     """
     b, hq, m, d = q.shape
     _, hkv, n, dv = v.shape
@@ -260,7 +278,9 @@ def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
     kernel = functools.partial(
         _attn_kernel, n_kv_blocks=n // bkv, bq=bq, bkv=bkv,
-        offset=offset, causal=causal, window=window, scale=scale)
+        offset=offset, causal=causal, window=window, scale=scale,
+        q_prologue=q_prologue, k_prologue=k_prologue,
+        o_epilogue=o_epilogue)
 
     return pl.pallas_call(
         kernel,

@@ -22,7 +22,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(a_ref, b_ref, d_ref, f_ref, g_ref, c_acc, e_acc, *, nn, nk):
+def _kernel(a_ref, b_ref, d_ref, f_ref, g_ref, c_acc, e_acc, *, nn, nk,
+            prologue=None, epilogue=None):
     n_i = pl.program_id(2)
     k_i = pl.program_id(3)
 
@@ -30,7 +31,10 @@ def _kernel(a_ref, b_ref, d_ref, f_ref, g_ref, c_acc, e_acc, *, nn, nk):
     def _():
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    c_acc[...] += jnp.dot(a_ref[0], b_ref[0],
+    a = a_ref[0]
+    if prologue is not None:
+        a = prologue(a)
+    c_acc[...] += jnp.dot(a, b_ref[0],
                           preferred_element_type=jnp.float32)
 
     @pl.when(k_i == nk - 1)
@@ -45,17 +49,23 @@ def _kernel(a_ref, b_ref, d_ref, f_ref, g_ref, c_acc, e_acc, *, nn, nk):
         def _():
             g = jnp.dot(e_acc[...].astype(f_ref.dtype), f_ref[0],
                         preferred_element_type=jnp.float32)
+            if epilogue is not None:
+                g = epilogue(g)
             g_ref[0] = g.astype(g_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                              "prologue", "epilogue"))
 def fused_gemm_chain3(a: jax.Array, b: jax.Array, d: jax.Array,
                       f: jax.Array, bm: int = 128, bn: int = 128,
-                      bk: int = 128, interpret: bool = False) -> jax.Array:
+                      bk: int = 128, prologue=None, epilogue=None,
+                      interpret: bool = False) -> jax.Array:
     """G = ((A@B)@D)@F fused.  a: (B,M,K), b: (B,K,N), d: (B,N,H),
     f: (B,H,G).  H and G stay full-width in VMEM (MBCI chains have
-    small trailing dims; Rule 4 prunes schedules where they don't fit)."""
+    small trailing dims; Rule 4 prunes schedules where they don't fit).
+    ``prologue``/``epilogue``: optional tile-local elementwise
+    stitching hooks, as in ``gemm_chain._chain_kernel``."""
     bsz, m, k = a.shape
     n = b.shape[-1]
     h = d.shape[-1]
@@ -64,7 +74,8 @@ def fused_gemm_chain3(a: jax.Array, b: jax.Array, d: jax.Array,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
     nn, nk = n // bn, k // bk
 
-    kernel = functools.partial(_kernel, nn=nn, nk=nk)
+    kernel = functools.partial(_kernel, nn=nn, nk=nk,
+                               prologue=prologue, epilogue=epilogue)
     return pl.pallas_call(
         kernel,
         grid=(bsz, m // bm, nn, nk),

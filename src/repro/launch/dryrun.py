@@ -174,6 +174,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "n_instances": n_attn,
             "regimes": attn_regimes,   # {"MxN": "spatial" | "ring"}
         },
+        # graph-level fusion planner's carve/stitch decisions for this
+        # cell (core/planner.py; {"plannable": False} when the arch or
+        # shape is outside the planner's domain)
+        "planner": hlo_analysis.planner_chain_report(
+            cfg, shape, mesh=mesh, rules=rules),
         "roofline": {
             "flops_per_device": total.flops,
             "bytes_per_device": bytes_kernelized,

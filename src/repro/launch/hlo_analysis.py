@@ -244,3 +244,44 @@ def kernelized_attention_bytes(cfg, shape, n_dev: int, mesh=None,
         total = layer_bytes(s, n_kv) * n_attn
         count = n_attn
     return total * passes, count
+
+
+def planner_chain_report(cfg, shape, mesh=None, rules=None) -> dict:
+    """Planner-carved chains for one dry-run cell (core/planner.py).
+
+    Reports what the graph-level fusion planner would carve for this
+    (config, shape) under the cell's tuner ``MeshSpec`` — which op
+    groups stay fused MBCI chains, which split compute-bound, and
+    where memory-bound glue got stitched — so a sweep record shows the
+    planner's decisions next to the roofline they price into.  Plans
+    replay from core.schedule_cache across cells.  Decode shapes and
+    non-plannable archs report ``{"plannable": False}``.
+    """
+    from ..core import planner
+
+    if shape.kind == "decode" or not planner.plannable(cfg):
+        return {"plannable": False}
+    spec = None
+    if mesh is not None:
+        from .mesh import tuner_mesh_spec
+        spec = tuner_mesh_spec(mesh, rules, kind="attention",
+                               batch=shape.batch,
+                               feature_dim=cfg.n_kv_heads)
+        if spec.is_single:
+            spec = None
+    plan = planner.plan_model(cfg, shape.batch, shape.seq, mesh=spec)
+    chains = [{
+        "kind": c.kind, "ops": list(c.ops), "fused": c.fused,
+        "ai": round(c.ai, 1),
+        "prologue": list(c.prologue), "epilogue": list(c.epilogue),
+    } for c in plan.layer.chains]
+    return {
+        "plannable": True,
+        "ridge": round(planner.ridge_intensity(), 1),
+        "chains": chains,
+        "n_fused": sum(1 for c in plan.layer.chains if c.fused),
+        "n_split": sum(1 for c in plan.layer.chains if not c.fused),
+        "n_stitched": len(plan.layer.stitched()),
+        "glue_standalone": list(plan.layer.glue),
+        "stitches_dropped": list(plan.layer.dropped),
+    }

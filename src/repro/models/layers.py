@@ -40,19 +40,29 @@ def dense_init(rng, shape, dtype, scale: Optional[float] = None):
     return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
 
 
-def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+def _rmsnorm_f32(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """rmsnorm without the trailing downcast — the stitched-epilogue
+    form (run_planned_layer): glue inside a carved unit computes wide
+    and downcasts once at the unit boundary."""
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
-    return out.astype(x.dtype)
+    return xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
 
 
-def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    return _rmsnorm_f32(x, w, eps).astype(x.dtype)
+
+
+def _layernorm_f32(x: jax.Array, w: jax.Array, b: jax.Array,
+                   eps: float) -> jax.Array:
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.var(xf, axis=-1, keepdims=True)
-    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w + b
-    return out.astype(x.dtype)
+    return (xf - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    return _layernorm_f32(x, w, b, eps).astype(x.dtype)
 
 
 def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -79,8 +89,8 @@ def specs_norm(cfg: ModelConfig, rules: Rules) -> dict:
 # RoPE
 # ---------------------------------------------------------------------------
 
-def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, Dh), positions: (S,) or (B, S)."""
+def _rope_f32(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """rope without the trailing downcast (see _rmsnorm_f32)."""
     dh = x.shape[-1]
     half = dh // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
@@ -94,8 +104,13 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     while cos.ndim < x.ndim - 1:
         cos, sin = cos[..., None, :], sin[..., None, :]
     x1, x2 = x[..., :half], x[..., half:]
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh), positions: (S,) or (B, S)."""
+    return _rope_f32(x, positions, theta).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -587,6 +602,147 @@ def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig, rules: Rules) -> jax.Arra
         h = jax.nn.gelu(x @ p["w_up"])
     h = constrain(h, rules, "batch", None, "tp")
     return constrain(h @ p["w_down"], rules, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Planner-driven layer execution (core/planner.py)
+# ---------------------------------------------------------------------------
+
+def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
+                      rules: Rules, *, positions: jax.Array,
+                      rt) -> jax.Array:
+    """Execute one attention block from a planner ``LayerPlan`` — the
+    zero-hand-specified-chains path behind ``Runtime(planner=True)``.
+
+    Walks the plan's op DAG; every node dispatches to the *same* jnp
+    code ``_apply_layer``'s hand-wired path runs (attention_block +
+    mlp_block twins, verbatim), so a stitch-disabled plan is
+    bit-identical to the hand-wired layer.  Glue stitched into a carved
+    chain as prologue/epilogue instead executes in f32 (the ``_*_f32``
+    twins — what a fused kernel's VMEM-resident epilogue computes in)
+    with ONE downcast at the carved unit's boundary; on float32 configs
+    that is still bitwise identical, on bf16 it differs only by where
+    rounding lands (docs/planner.md).
+
+    lp: ``core.planner.LayerPlan`` (duck-typed; no core import here).
+    p: the layer's param pytree ({"ln1","mix","ln2","ff"}).
+    """
+    b, s, d = x.shape
+    dh = cfg.dh
+    dt = x.dtype
+    pm, pf = p["mix"], p["ff"]
+    win = cfg.window
+
+    stitched: set = set()
+    downcast_at: set = set()
+    for c in lp.chains:
+        stitched.update(c.prologue)
+        stitched.update(c.epilogue)
+        if c.prologue or c.epilogue:
+            # the unit computes wide past its stitched glue; cast back
+            # to the model dtype exactly once, where the kernel's final
+            # HBM store would round
+            downcast_at.add(c.epilogue[-1] if c.epilogue else c.ops[-1])
+
+    env: dict = {"x": x}
+    for node in lp.nodes:
+        nm, role, ins = node.name, node.role, node.ins
+        if role == "norm":
+            val = env[ins[0]]
+            pn = p[nm]    # DAG node names ln1/ln2 mirror the param keys
+            if nm in stitched:
+                out = (_layernorm_f32(val, pn["w"], pn["b"], cfg.norm_eps)
+                       if cfg.norm == "layernorm"
+                       else _rmsnorm_f32(val, pn["w"], cfg.norm_eps))
+            else:
+                out = apply_norm(pn, val, cfg)
+        elif role == "gemm":
+            xin = env[ins[0]]
+            if nm == "wq":
+                out = jnp.einsum("bsd,dh->bsh", xin, pm["wq"]
+                                 ).reshape(b, s, cfg.n_heads, dh)
+            elif nm == "wk":
+                out = jnp.einsum("bsd,dh->bsh", xin, pm["wk"]
+                                 ).reshape(b, s, cfg.n_kv_heads, dh)
+            elif nm == "wv":
+                out = jnp.einsum("bsd,dh->bsh", xin, pm["wv"]
+                                 ).reshape(b, s, cfg.n_kv_heads, dh)
+            elif nm == "wo":
+                out = jnp.einsum("bsh,hd->bsd", xin, pm["wo"])
+                out = constrain(out, rules, "batch", "seq", None)
+            elif nm in ("w_gate", "w_up"):
+                out = xin @ pf[nm]
+            elif nm == "w_down":
+                out = constrain(xin @ pf["w_down"], rules,
+                                "batch", None, None)
+            else:
+                raise ValueError(f"unknown gemm node {nm!r}")
+        elif role == "qk_norm":
+            w = pm["q_norm"] if nm.endswith("_q") else pm["k_norm"]
+            val = env[ins[0]]
+            out = (_rmsnorm_f32(val, w, cfg.norm_eps) if nm in stitched
+                   else rmsnorm(val, w, cfg.norm_eps))
+        elif role == "rope":
+            val = env[ins[0]]
+            out = (_rope_f32(val, positions, cfg.rope_theta)
+                   if nm in stitched
+                   else rope(val, positions, cfg.rope_theta))
+        elif role == "attn_qk":
+            # the attention core executes as one unit here (fused chain
+            # or not — fusion changes pricing and TPU kernel dispatch,
+            # not the XLA twin): attention_block's cache-free
+            # mid-section, verbatim
+            q = constrain(env[ins[0]].transpose(0, 2, 1, 3), rules,
+                          "batch", "tp", None, None)
+            k = constrain(env[ins[1]].transpose(0, 2, 1, 3), rules,
+                          "batch", None, None, None)
+            v = constrain(env["wv"].transpose(0, 2, 1, 3), rules,
+                          "batch", None, None, None)
+            scale = 1.0 / math.sqrt(dh)
+            group = cfg.n_heads // cfg.n_kv_heads
+            if rt.kernel_ops and s > 1:
+                from ..kernels import ops as kernel_ops_mod
+                o = kernel_ops_mod.attention(
+                    q, k, v, causal=True, window=win, scale=scale,
+                    mesh=rt.mesh if rules.enabled else None, rules=rules)
+            else:
+                kk = jnp.repeat(k, group, axis=1)
+                vv = jnp.repeat(v, group, axis=1)
+                if cfg.use_fused_attention and s > 2 * rt.bkv:
+                    o = streaming_attention(q, kk, vv, causal=True,
+                                            window=win, scale=scale,
+                                            bkv=rt.bkv, q_offset=0,
+                                            unroll=rt.unroll)
+                else:
+                    o = naive_attention(q, kk, vv, causal=True,
+                                        window=win, scale=scale)
+            o = constrain(o, rules, "batch", "tp", None, None)
+            env["qk"] = env["softmax"] = None   # folded into this unit
+            out = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+            nm = "pv"
+        elif role in ("softmax", "attn_pv"):
+            continue                            # handled at attn_qk
+        elif role == "gate_act":
+            if cfg.act in ("swiglu", "geglu"):
+                act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+                h = act(env[ins[0]]) * env[ins[1]]
+            else:
+                h = jax.nn.gelu(env[ins[0]])
+            out = constrain(h, rules, "batch", None, "tp")
+        elif role == "residual":
+            mix, res = env[ins[0]], env[ins[1]]
+            if nm in stitched:
+                out = res.astype(jnp.float32) + mix.astype(jnp.float32)
+            else:
+                out = res + mix
+        else:
+            raise ValueError(f"unknown node role {role!r}")
+        if nm in downcast_at:
+            out = out.astype(dt)
+        env[nm] = out
+
+    out = env[lp.nodes[-1].name]
+    return out.astype(dt) if out.dtype != dt else out
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,15 @@ class Runtime:
     paged_block: Optional[tuple] = None  # (bq, bkv) tiles the paged
     # regime search picked — serving.engine threads them so the kernel
     # path executes the schedule the tuner priced (docs/serving.md).
+    planner: bool = False   # run attention blocks from core.planner
+    # output — chains carved + glue stitched from the config alone,
+    # zero hand-specified chains (docs/planner.md).  Cache-free forward
+    # only; prefill/decode and non-plannable configs fall back to the
+    # hand-wired path.
+    stitch: bool = True     # planner mode only: stitch memory-bound
+    # glue into carved chains as prologue/epilogue (FusionStitching).
+    # False keeps every glue op standalone — bit-identical to the
+    # hand-wired layer, which tests/test_planner.py asserts.
 
 
 def _layer_types(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
@@ -223,6 +232,16 @@ class LM:
                      page_table: Optional[jax.Array] = None
                      ) -> tuple[jax.Array, Any]:
         cfg, rt = self.cfg, self.rt
+        if (rt.planner and kind == "attn" and cache is None
+                and page_table is None):
+            from ..core import planner as planner_mod
+            if planner_mod.plannable(cfg):
+                plan = planner_mod.plan_model(
+                    cfg, int(x.shape[0]), int(x.shape[1]),
+                    stitch=rt.stitch)
+                return L.run_planned_layer(
+                    plan.layer, p, x, cfg, rt.rules,
+                    positions=positions, rt=rt), None
         h = L.apply_norm(p["ln1"], x, cfg)
         if kind == "attn":
             win = cfg.window
