@@ -1,0 +1,126 @@
+"""Planner-SERVED pricing + warm plan replay (core/planner.py serving
+phases; docs/planner.md §7).
+
+PR 6's bench_planner covers the cache-free forward.  This lane prices
+the serving steady state the engine actually runs under
+``Runtime(planner=True)``: the decode-step and chunked-prefill blocks
+over a **paged** KV cache (phase-keyed DAGs with the standalone
+``kv_write`` node, attention priced by ``api.fuse_attention_paged``
+with its gather term).  Per plannable config and phase:
+
+  * planner_us     — priced per-block time of the planner-carved layout
+  * hand_us        — priced per-block time of the hand-wired paged
+                     layout (fused paged attention, unfused MLP,
+                     standalone glue + kv_write)
+  * plan_cold_ms   — carve + stitch wall-clock (first plan)
+  * replay_ms      — warm replay from the on-disk ``("plan", …, phase,
+                     paged, kv_len)`` record with the in-process memo
+                     dropped — the serving-relaunch path
+
+``--smoke`` (wired into ``benchmarks/run.py --smoke``) asserts the two
+serving invariants: planned-serving pricing never regresses below the
+hand-wired paged path (price_plan demotes losing chains, so <= holds
+by construction), and warm replay stays ms-scale — a relaunch must
+never pay a re-carve.
+"""
+import argparse
+import sys
+import time
+
+from repro.configs import ARCHS, get_config
+from repro.core import planner
+
+from ._util import isolated_schedule_cache
+
+SMOKE_REPLAY_BUDGET_S = 0.25   # disk replay per plan (generous: shared
+#                                CI runners; real cost is ~1 ms)
+
+# the serving steady state: a decode step batch over a long paged
+# context, and the chunked prefill that built it
+PAGE, KV_LEN = 16, 2048
+CELLS = [
+    ("decode", 8, 1),      # (phase, batch, seq)
+    ("prefill", 1, 512),
+]
+
+
+def _plannable_archs():
+    return [a for a in ARCHS if planner.plannable(get_config(a))]
+
+
+def _row(arch: str, phase: str, batch: int, seq: int) -> dict:
+    cfg = get_config(arch)
+    planner.clear_memo()
+    kw = dict(phase=phase, paged=PAGE, kv_len=KV_LEN)
+    t0 = time.perf_counter()
+    plan = planner.plan_model(cfg, batch, seq, **kw)
+    cold = time.perf_counter() - t0
+    planner.clear_memo()           # relaunch semantics: disk only
+    t0 = time.perf_counter()
+    replayed = planner.plan_model(cfg, batch, seq, **kw)
+    replay = time.perf_counter() - t0
+    assert replayed == plan
+    price = planner.price_plan(plan, cfg)
+    return {
+        "name": f"planner_serve_{arch}_{phase}",
+        "arch": arch,
+        "phase": phase,
+        "batch": batch,
+        "seq": seq,
+        "paged": PAGE,
+        "kv_len": KV_LEN,
+        "plan_cold_ms": round(cold * 1e3, 3),
+        "replay_ms": round(replay * 1e3, 4),
+        "planner_us": round(price["planner_seconds"] * 1e6, 3),
+        "hand_us": round(price["hand_seconds"] * 1e6, 3),
+        "speedup": round(price["hand_seconds"]
+                         / price["planner_seconds"], 4),
+        "n_fused": sum(1 for c in plan.layer.chains if c.fused),
+        "n_stitched": len(plan.layer.stitched()),
+    }
+
+
+def main():
+    rows = []
+    for arch in _plannable_archs():
+        for phase, batch, seq in CELLS:
+            r = _row(arch, phase, batch, seq)
+            rows.append(r)
+            print(f"{r['name']},{r['planner_us']},"
+                  f"hand_us={r['hand_us']} speedup={r['speedup']} "
+                  f"replay_ms={r['replay_ms']} "
+                  f"n_fused={r['n_fused']} n_stitched={r['n_stitched']}")
+    return rows
+
+
+def smoke() -> int:
+    """CI lane: planned serving never prices worse than the hand-wired
+    paged path, and a relaunch replays its plans at ms-scale."""
+    rc = 0
+    for arch in _plannable_archs():
+        for phase, batch, seq in CELLS:
+            r = _row(arch, phase, batch, seq)
+            ok_price = r["planner_us"] <= r["hand_us"] * (1 + 1e-9)
+            ok_replay = r["replay_ms"] / 1e3 <= SMOKE_REPLAY_BUDGET_S
+            status = "ok" if (ok_price and ok_replay) else "FAIL"
+            print(f"# [{status}] {arch}/{phase}: "
+                  f"planner={r['planner_us']}us hand={r['hand_us']}us "
+                  f"(x{r['speedup']}) replay={r['replay_ms']}ms",
+                  file=sys.stderr)
+            if not ok_price:
+                print(f"# FAIL {arch}/{phase}: planned serving prices "
+                      f"worse than hand-wired paged", file=sys.stderr)
+                rc = 1
+            if not ok_replay:
+                print(f"# FAIL {arch}/{phase}: warm replay exceeded "
+                      f"{SMOKE_REPLAY_BUDGET_S}s", file=sys.stderr)
+                rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    with isolated_schedule_cache():
+        sys.exit(smoke() if args.smoke else (main() and 0))

@@ -42,24 +42,30 @@ def main(argv=None) -> None:
                          "the mesh regime sweep incl. the ring-attention "
                          "crossover (bench_mesh_tuning), the "
                          "continuous-batching scheduler + paged regime "
-                         "warm start (bench_serving), and the fusion "
-                         "planner's pricing floor (bench_planner); "
+                         "warm start (bench_serving), the fusion "
+                         "planner's pricing floor (bench_planner), and "
+                         "the planner-serve lane — planned decode/"
+                         "prefill pricing vs hand-wired paged + warm "
+                         "plan replay (bench_planner_serve); "
                          "writes no JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import (bench_mesh_tuning, bench_planner, bench_serving,
+        from . import (bench_mesh_tuning, bench_planner,
+                       bench_planner_serve, bench_serving,
                        bench_tuning_time)
         with isolated_schedule_cache():
             rc = bench_tuning_time.smoke()
             rc = bench_mesh_tuning.smoke() or rc
             rc = bench_serving.smoke() or rc
             rc = bench_planner.smoke() or rc
+            rc = bench_planner_serve.smoke() or rc
         sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,
                    bench_gemm_chain, bench_mesh_tuning,
-                   bench_model_accuracy, bench_planner, bench_serving,
+                   bench_model_accuracy, bench_planner,
+                   bench_planner_serve, bench_serving,
                    bench_tuning_time, roofline)
 
     rows_by_mod: dict[str, list] = {}
@@ -75,6 +81,8 @@ def main(argv=None) -> None:
                             "(docs/serving.md)"),
             (bench_planner, "planner vs hand-wired pricing "
                             "(docs/planner.md)"),
+            (bench_planner_serve, "planner-served decode/prefill "
+                                  "pricing (docs/planner.md §7)"),
             (bench_model_accuracy, "Figs 10-11"),
             (bench_ablation, "pruning-rule ablation (extends Fig 7)"),
             (roofline, "Roofline summary (dry-run artifacts)"),

@@ -7,7 +7,12 @@ module derives the same decisions from a model config alone:
 1. **Trace** — ``layer_op_dag`` expands one transformer block of an
    attention-only config into a small op DAG: compute-intensive nodes
    (projections, the attention core, the MLP GEMMs) and memory-bound
-   glue (norms, rope, residual adds, SwiGLU gating, softmax).
+   glue (norms, rope, residual adds, SwiGLU gating, softmax).  Three
+   block variants share the tracer: the cache-free training forward
+   (``phase="forward"``) and the serving phases (``"prefill"`` /
+   ``"decode"``), which insert the KV-cache write-through as an
+   explicit ``kv_write`` glue node and open the attention kv extent to
+   the cache length instead of the query length.
 2. **Carve** — template groups of CI nodes connected through
    single-consumer glue become candidate chains (``chain.
    attention_chain``, ``chain.mlp_chain``); a candidate stays fused
@@ -47,8 +52,12 @@ from .pruning import stitched_vmem_ok
 
 # Bump when the carve/stitch semantics change: old plan records become
 # invisible (the version is a key component) instead of being replayed
-# with new meaning.
-PLANNER_VERSION = 1
+# with new meaning.  v2: phase-keyed plans (forward/prefill/decode),
+# paged page-size and kv-cache extent join the fingerprint, and the
+# serving DAGs gain the ``kv_write`` glue node.
+PLANNER_VERSION = 2
+
+PHASES = ("forward", "prefill", "decode")
 
 _UNIT = 128  # MXU lane width: stitch-gate tile granularity
 
@@ -72,7 +81,7 @@ class OpNode:
     kind: str   # "ci" | "glue"
     role: str   # ci: "gemm" | "attn_qk" | "attn_pv"
     #            glue: "norm" | "qk_norm" | "rope" | "softmax"
-    #                  | "residual" | "gate_act"
+    #                  | "residual" | "gate_act" | "kv_write"
     ins: tuple[str, ...]
 
 
@@ -96,12 +105,26 @@ def _act_name(cfg) -> str:
     return {"swiglu": "silu", "geglu": "gelu"}.get(cfg.act, "gelu")
 
 
-def layer_op_dag(cfg) -> tuple[OpNode, ...]:
+def layer_op_dag(cfg, phase: str = "forward") -> tuple[OpNode, ...]:
     """One attention block of ``cfg`` as an op DAG, topologically
     ordered.  All blocks of a plannable config are identical, so one
-    DAG plans the whole stack."""
+    DAG plans the whole stack.
+
+    ``phase`` selects the block variant.  ``"forward"`` is the
+    cache-free dense forward PR 6 planned.  ``"prefill"`` and
+    ``"decode"`` are the serving variants: the freshly projected
+    (and rope'd) k together with v is written through to the KV cache
+    — an explicit ``kv_write`` glue node (contiguous slice update or
+    paged ``scatter_pages``) — and the attention core reads the cache,
+    so its kv extent is the cache length, not the query length
+    (``kv_len`` at carve time).  Decode is prefill at query length 1;
+    the DAGs differ only through the shapes the carver judges.
+    """
+    if phase not in PHASES:
+        raise ValueError(f"phase {phase!r} not in {PHASES}")
     if not plannable(cfg):
         raise ValueError(f"config {cfg.name!r} is not plannable")
+    serving = phase != "forward"
     nodes: list[OpNode] = []
     add = nodes.append
     add(OpNode("ln1", "glue", "norm", ("x",)))
@@ -117,9 +140,16 @@ def layer_op_dag(cfg) -> tuple[OpNode, ...]:
         add(OpNode("rope_q", "glue", "rope", (q,)))
         add(OpNode("rope_k", "glue", "rope", (k,)))
         q, k = "rope_q", "rope_k"
+    v = "wv"
+    if serving:
+        # HBM write-through of this step's k/v into the cache; the
+        # attention core then reads k and v *from the cache*, so qk/pv
+        # depend on the write, not on the projection tails directly.
+        add(OpNode("kv_write", "glue", "kv_write", (k, v)))
+        k = v = "kv_write"
     add(OpNode("qk", "ci", "attn_qk", (q, k)))
     add(OpNode("softmax", "glue", "softmax", ("qk",)))
-    add(OpNode("pv", "ci", "attn_pv", ("softmax", "wv")))
+    add(OpNode("pv", "ci", "attn_pv", ("softmax", v)))
     add(OpNode("wo", "ci", "gemm", ("pv",)))
     add(OpNode("res1", "glue", "residual", ("wo", "x")))
     add(OpNode("ln2", "glue", "norm", ("res1",)))
@@ -181,6 +211,9 @@ class Plan:
     mesh: Optional[tuple]   # MeshSpec.canonical(), or None
     n_layers: int
     layer: LayerPlan        # all blocks of a plannable config are alike
+    phase: str = "forward"  # "forward" | "prefill" | "decode"
+    paged: Optional[int] = None    # page size of a paged-serving plan
+    kv_len: Optional[int] = None   # attention kv extent (cache length)
 
 
 # ---------------------------------------------------------------------------
@@ -197,13 +230,17 @@ def _local_ai(chain: Chain, mesh: Optional[MeshSpec]) -> float:
     return local.arithmetic_intensity()
 
 
-def _template_chains(cfg, batch: int, seq: int
+def _template_chains(cfg, batch: int, seq: int,
+                     kv_len: Optional[int] = None
                      ) -> list[tuple[str, tuple[str, ...], Chain]]:
     """The candidate units of one block, in topological order:
-    (kind, covered DAG nodes, the Chain to judge/price)."""
+    (kind, covered DAG nodes, the Chain to judge/price).  ``kv_len``
+    opens the attention kv extent past the query length (serving
+    phases read the whole cache; ``None`` means kv == seq)."""
     d, dh = cfg.d_model, cfg.dh
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     dt = cfg.dtype
+    kv = kv_len if kv_len is not None else seq
     out: list[tuple[str, tuple[str, ...], Chain]] = [
         ("gemm", ("wq",), single_gemm(seq, hq * dh, d, batch=batch,
                                       dtype=dt, name="wq")),
@@ -212,7 +249,7 @@ def _template_chains(cfg, batch: int, seq: int
         ("gemm", ("wv",), single_gemm(seq, hkv * dh, d, batch=batch,
                                       dtype=dt, name="wv")),
         ("attention", ("qk", "softmax", "pv"),
-         attention_chain(seq, seq, dh, dh, heads=hq, batch=batch,
+         attention_chain(seq, kv, dh, dh, heads=hq, batch=batch,
                          dtype=dt, causal=True, window=cfg.window)),
         ("gemm", ("wo",), single_gemm(seq, d, hq * dh, batch=batch,
                                       dtype=dt, name="wo")),
@@ -225,18 +262,20 @@ def _template_chains(cfg, batch: int, seq: int
     return out
 
 
-def _split_chains(kind: str, cfg, batch: int, seq: int
+def _split_chains(kind: str, cfg, batch: int, seq: int,
+                  kv_len: Optional[int] = None
                   ) -> list[tuple[tuple[str, ...], Chain]]:
     """Unfused fallback for a compute-bound template: one
     ``single_gemm`` per CI op; interior glue goes standalone."""
     d, dh = cfg.d_model, cfg.dh
     hq = cfg.n_heads
     dt = cfg.dtype
+    kv = kv_len if kv_len is not None else seq
     if kind == "attention":
         bb = batch * hq
-        return [(("qk",), single_gemm(seq, seq, dh, batch=bb, dtype=dt,
+        return [(("qk",), single_gemm(seq, kv, dh, batch=bb, dtype=dt,
                                       name="qk")),
-                (("pv",), single_gemm(seq, dh, seq, batch=bb, dtype=dt,
+                (("pv",), single_gemm(seq, dh, kv, batch=bb, dtype=dt,
                                       name="pv"))]
     ff = cfg.d_ff
     out = []
@@ -269,7 +308,7 @@ def _glue_extra_bytes(node: OpNode, cfg, seq: int) -> int:
         return min(seq, _UNIT) * min(cfg.d_model, _UNIT) * dtb
     if node.role == "gate_act":
         return min(seq, _UNIT) * min(cfg.d_ff, _UNIT) * dtb
-    return 0                               # softmax: no extra operands
+    return 0                # softmax / kv_write: no extra operands
 
 
 def _stitch_full_loops(node: OpNode, as_epilogue: bool) -> tuple[str, ...]:
@@ -285,8 +324,10 @@ def _stitch_full_loops(node: OpNode, as_epilogue: bool) -> tuple[str, ...]:
 
 
 def _carve_and_stitch(cfg, batch: int, seq: int, *, stitch: bool,
-                      hw: TpuSpec, mesh: Optional[MeshSpec]) -> LayerPlan:
-    nodes = layer_op_dag(cfg)
+                      hw: TpuSpec, mesh: Optional[MeshSpec],
+                      phase: str = "forward",
+                      kv_len: Optional[int] = None) -> LayerPlan:
+    nodes = layer_op_dag(cfg, phase)
     present = {n.name for n in nodes}
     ridge = ridge_intensity(hw)
 
@@ -304,13 +345,14 @@ def _carve_and_stitch(cfg, batch: int, seq: int, *, stitch: bool,
         for o in ops:
             covered[o] = idx
 
-    for kind, ops, ch in _template_chains(cfg, batch, seq):
+    for kind, ops, ch in _template_chains(cfg, batch, seq, kv_len):
         if len(ops) == 1:
             add(kind, ops, False, ch)
         elif _local_ai(ch, mesh) < ridge:
             add(kind, ops, True, ch)     # MBCI: keep fused
         else:                            # compute-bound: split
-            for sub_ops, sub_ch in _split_chains(kind, cfg, batch, seq):
+            for sub_ops, sub_ch in _split_chains(kind, cfg, batch, seq,
+                                                 kv_len):
                 add("gemm", sub_ops, False, sub_ch)
 
     consumers: dict[str, tuple[str, ...]] = {
@@ -327,6 +369,14 @@ def _carve_and_stitch(cfg, batch: int, seq: int, *, stitch: bool,
     for node in nodes:
         g = node.name
         if node.kind != "glue" or g in covered:
+            continue
+        if node.role == "kv_write":
+            # The cache write-through is an HBM scatter by design —
+            # there is no VMEM tile to stitch it into (the attention
+            # core reads the *whole cache*, not this step's slice), so
+            # it always executes standalone, never as an epilogue of
+            # the k/v projections.
+            glue_standalone.append(g)
             continue
         if not stitch:
             glue_standalone.append(g)
@@ -388,10 +438,13 @@ def config_fingerprint(cfg) -> tuple:
 
 
 def plan_key(cfg, batch: int, seq: int, stitch: bool,
-             hw: TpuSpec = V5E, mesh: Optional[MeshSpec] = None) -> tuple:
+             hw: TpuSpec = V5E, mesh: Optional[MeshSpec] = None,
+             phase: str = "forward", paged: Optional[int] = None,
+             kv_len: Optional[int] = None) -> tuple:
     return ("plan", PLANNER_VERSION, config_fingerprint(cfg), batch, seq,
             bool(stitch), hw.name,
-            mesh.canonical() if mesh is not None else None)
+            mesh.canonical() if mesh is not None else None,
+            phase, paged, kv_len)
 
 
 def clear_memo() -> None:
@@ -401,15 +454,29 @@ def clear_memo() -> None:
 
 def plan_model(cfg, batch: int, seq: int, *, stitch: bool = True,
                hw: TpuSpec = V5E, mesh: Optional[MeshSpec] = None,
-               use_cache: bool = True) -> Plan:
+               use_cache: bool = True, phase: str = "forward",
+               paged: Optional[int] = None,
+               kv_len: Optional[int] = None) -> Plan:
     """Plan one model: carve + stitch a block, replaying from the
     ``("plan", …)`` record in ``core.schedule_cache`` when one exists
     (a dry-run sweep or serving relaunch never re-plans).  Memoized
     in-process, so the ``Runtime(planner=True)`` trace path pays the
-    planning cost once per (config, shape, stitch, regime)."""
+    planning cost once per (config, shape, stitch, phase, regime).
+
+    Serving phases take ``kv_len`` (the cache extent the attention
+    core reads — defaults to ``seq``) and, for paged serving,
+    ``paged`` = the KV page size; both join the plan fingerprint.
+    ``"forward"`` plans are cache-free and ignore/normalize both."""
     if not plannable(cfg):
         raise ValueError(f"config {cfg.name!r} is not plannable")
-    key = plan_key(cfg, batch, seq, stitch, hw, mesh)
+    if phase not in PHASES:
+        raise ValueError(f"phase {phase!r} not in {PHASES}")
+    if phase == "forward":
+        paged = kv_len = None
+    elif kv_len is None:
+        kv_len = seq
+    key = plan_key(cfg, batch, seq, stitch, hw, mesh, phase, paged,
+                   kv_len)
     plan = _PLAN_MEMO.get(key)
     if plan is not None:
         return plan
@@ -424,11 +491,12 @@ def plan_model(cfg, batch: int, seq: int, *, stitch: bool = True,
                 _PLAN_MEMO[key] = plan
                 return plan
     layer = _carve_and_stitch(cfg, batch, seq, stitch=stitch, hw=hw,
-                              mesh=mesh)
+                              mesh=mesh, phase=phase, kv_len=kv_len)
     plan = Plan(version=PLANNER_VERSION, config=cfg.name, batch=batch,
                 seq=seq, dtype=cfg.dtype, stitch=bool(stitch),
                 mesh=mesh.canonical() if mesh is not None else None,
-                n_layers=cfg.n_layers, layer=layer)
+                n_layers=cfg.n_layers, layer=layer, phase=phase,
+                paged=paged, kv_len=kv_len)
     if use_cache:
         schedule_cache.store_plan(key, hw, plan_to_json(plan))
     _PLAN_MEMO[key] = plan
@@ -449,6 +517,9 @@ def plan_to_json(plan: Plan) -> dict:
         "stitch": plan.stitch,
         "mesh": _mesh_to_json(plan.mesh),
         "n_layers": plan.n_layers,
+        "phase": plan.phase,
+        "paged": plan.paged,
+        "kv_len": plan.kv_len,
         "layer": {
             "nodes": [[n.name, n.kind, n.role, list(n.ins)]
                       for n in plan.layer.nodes],
@@ -478,11 +549,18 @@ def plan_from_json(data: dict) -> Plan:
                      for c in lay["chains"]),
         glue=tuple(lay["glue"]),
         dropped=tuple(lay["dropped"]))
+    # "phase" is read strictly: a pre-v2 record raises KeyError here,
+    # which plan_model treats as stale and re-plans.
     return Plan(version=int(data["version"]), config=str(data["config"]),
                 batch=int(data["batch"]), seq=int(data["seq"]),
                 dtype=str(data["dtype"]), stitch=bool(data["stitch"]),
                 mesh=_mesh_from_json(data["mesh"]),
-                n_layers=int(data["n_layers"]), layer=layer)
+                n_layers=int(data["n_layers"]), layer=layer,
+                phase=str(data["phase"]),
+                paged=(None if data["paged"] is None
+                       else int(data["paged"])),
+                kv_len=(None if data["kv_len"] is None
+                        else int(data["kv_len"])))
 
 
 def _mesh_to_json(canonical):
@@ -522,11 +600,13 @@ def _roofline_seconds(chain: Chain, hw: TpuSpec,
                local.total_flops() / hw.peak_flops)
 
 
-def _glue_elems(node: OpNode, cfg, batch: int, seq: int) -> dict:
+def _glue_elems(node: OpNode, cfg, batch: int, seq: int,
+                kv_len: Optional[int] = None) -> dict:
     """(read, write) element traffic of one standalone glue kernel."""
     d, dh = cfg.d_model, cfg.dh
     hq, hkv = cfg.n_heads, cfg.n_kv_heads
     tok = batch * seq
+    kv = kv_len if kv_len is not None else seq
     if node.role == "norm":
         return {"rw": 2 * tok * d, "extra": d}
     if node.role == "qk_norm":
@@ -536,29 +616,34 @@ def _glue_elems(node: OpNode, cfg, batch: int, seq: int) -> dict:
         h = hq if node.name.endswith("_q") else hkv
         return {"rw": 2 * tok * h * dh, "extra": seq * dh}
     if node.role == "softmax":
-        return {"rw": 2 * batch * hq * seq * seq, "extra": 0}
+        return {"rw": 2 * batch * hq * seq * kv, "extra": 0}
     if node.role == "residual":
         return {"rw": 3 * tok * d, "extra": 0}
+    if node.role == "kv_write":
+        # read this step's k and v, write both through to the cache
+        return {"rw": 4 * tok * hkv * dh, "extra": 0}
     # gate_act: read gate (+up), write hidden
     n_in = 2 if _gated(cfg) else 1
     return {"rw": (n_in + 1) * tok * cfg.d_ff, "extra": 0}
 
 
 def _glue_standalone_seconds(node: OpNode, cfg, batch: int, seq: int,
-                             hw: TpuSpec) -> float:
-    e = _glue_elems(node, cfg, batch, seq)
+                             hw: TpuSpec,
+                             kv_len: Optional[int] = None) -> float:
+    e = _glue_elems(node, cfg, batch, seq, kv_len)
     dtb = DTYPE_BYTES[cfg.dtype]
     return (e["rw"] * dtb + e["extra"] * 4) / hw.hbm_bw
 
 
 def _glue_stitched_seconds(node: OpNode, cfg, batch: int, seq: int,
-                           hw: TpuSpec) -> float:
+                           hw: TpuSpec,
+                           kv_len: Optional[int] = None) -> float:
     """Stitched glue pays only its EXTRA operand traffic (residual
     stream read, rope tables, norm scales); the main operand stays in
     VMEM and its output write replaces the host chain's — that saved
     round trip is the whole point of FusionStitching."""
     dtb = DTYPE_BYTES[cfg.dtype]
-    extra = _glue_elems(node, cfg, batch, seq)["extra"] * 4
+    extra = _glue_elems(node, cfg, batch, seq, kv_len)["extra"] * 4
     if node.role == "residual":
         extra += batch * seq * cfg.d_model * dtb
     return extra / hw.hbm_bw
@@ -571,22 +656,39 @@ def price_plan(plan: Plan, cfg, *, hw: TpuSpec = V5E,
     glue — what ``models/layers.py`` executes).
 
     Fused chains are priced by the tuner (``api.fuse_attention`` /
-    ``api.fuse_mlp_chain``, both cache levels apply) and *demoted* to
-    their unfused alternative when the search's eq (2') time does not
-    beat it — so ``planner_seconds <= hand_seconds`` holds by
-    construction, which ``benchmarks/bench_planner.py`` asserts.
+    ``api.fuse_attention_paged`` / ``api.fuse_mlp_chain``, both cache
+    levels apply) and *demoted* to their unfused alternative when the
+    search's eq (2') time does not beat it — so ``planner_seconds <=
+    hand_seconds`` holds by construction, which
+    ``benchmarks/bench_planner.py`` and
+    ``benchmarks/bench_planner_serve.py`` assert.
+
+    Serving plans price phase-faithfully: the attention kv extent is
+    ``plan.kv_len`` (the cache length) and a paged plan routes through
+    the paged tuner, whose report already includes the page-gather
+    term; the ``kv_write`` write-through prices standalone on *both*
+    sides (planner and hand-wired execute the identical scatter).
     """
     from . import api
+    from .perf_model import paged_gather_seconds
 
     batch, seq = plan.batch, plan.seq
+    kv = plan.kv_len if plan.kv_len is not None else seq
     nodes = {n.name: n for n in plan.layer.nodes}
     templates = {ops: (kind, ch)
-                 for kind, ops, ch in _template_chains(cfg, batch, seq)}
+                 for kind, ops, ch in _template_chains(cfg, batch, seq,
+                                                       plan.kv_len)}
 
     def tuned_seconds(kind: str, ch_ops: tuple[str, ...]) -> float:
-        if kind == "attention":
+        if kind == "attention" and plan.paged is not None:
+            tk = api.fuse_attention_paged(
+                seq, kv, cfg.dh, cfg.dh, page_size=plan.paged,
+                heads=cfg.n_heads, batch=batch, dtype=cfg.dtype,
+                causal=True, window=cfg.window, hw=hw, mesh=mesh,
+                seed=seed)
+        elif kind == "attention":
             tk = api.fuse_attention(
-                seq, seq, cfg.dh, cfg.dh, heads=cfg.n_heads, batch=batch,
+                seq, kv, cfg.dh, cfg.dh, heads=cfg.n_heads, batch=batch,
                 dtype=cfg.dtype, causal=True, window=cfg.window, hw=hw,
                 mesh=mesh, seed=seed)
         else:
@@ -598,10 +700,20 @@ def price_plan(plan: Plan, cfg, *, hw: TpuSpec = V5E,
 
     def unfused_alt_seconds(kind: str) -> float:
         t = sum(_roofline_seconds(ch, hw, mesh)
-                for _, ch in _split_chains(kind, cfg, batch, seq))
+                for _, ch in _split_chains(kind, cfg, batch, seq,
+                                           plan.kv_len))
         interior = "softmax" if kind == "attention" else "act_gate"
         t += _glue_standalone_seconds(nodes[interior], cfg, batch, seq,
-                                      hw)
+                                      hw, plan.kv_len)
+        if kind == "attention" and plan.paged is not None:
+            # the unfused split still reads the cache through the page
+            # tables — same gather surcharge the paged tuner prices
+            _, attn_ch = next(
+                (k, c) for k, ops, c
+                in _template_chains(cfg, batch, seq, plan.kv_len)
+                if k == "attention")
+            t += paged_gather_seconds(attn_ch, plan.paged, hw=hw,
+                                      mesh=mesh)
         return t
 
     per_chain: dict[str, dict] = {}
@@ -620,8 +732,10 @@ def price_plan(plan: Plan, cfg, *, hw: TpuSpec = V5E,
             _, ch = templates.get(c.ops) or (None, None)
             if ch is None:   # split-out singleton: rebuild its chain
                 splits = dict(
-                    _split_chains("attention", cfg, batch, seq)
-                    + _split_chains("mlp", cfg, batch, seq))
+                    _split_chains("attention", cfg, batch, seq,
+                                  plan.kv_len)
+                    + _split_chains("mlp", cfg, batch, seq,
+                                    plan.kv_len))
                 ch = splits[c.ops]
             chosen = _roofline_seconds(ch, hw, mesh)
             per_chain[name] = {"kind": c.kind, "seconds": chosen}
@@ -630,10 +744,10 @@ def price_plan(plan: Plan, cfg, *, hw: TpuSpec = V5E,
     glue_seconds = 0.0
     for g in plan.layer.glue:
         glue_seconds += _glue_standalone_seconds(nodes[g], cfg, batch,
-                                                 seq, hw)
+                                                 seq, hw, plan.kv_len)
     for g in plan.layer.stitched():
         glue_seconds += _glue_stitched_seconds(nodes[g], cfg, batch,
-                                               seq, hw)
+                                               seq, hw, plan.kv_len)
     planner_seconds += glue_seconds
 
     # hand-wired: fused attention, everything else unfused, all glue
@@ -649,7 +763,8 @@ def price_plan(plan: Plan, cfg, *, hw: TpuSpec = V5E,
         hand += _roofline_seconds(ch, hw, mesh)
     for n in plan.layer.nodes:
         if n.kind == "glue" and n.name not in ("softmax", "act_gate"):
-            hand += _glue_standalone_seconds(n, cfg, batch, seq, hw)
+            hand += _glue_standalone_seconds(n, cfg, batch, seq, hw,
+                                             plan.kv_len)
 
     return {
         "planner_seconds": planner_seconds,

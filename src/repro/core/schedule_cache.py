@@ -197,11 +197,17 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
 # the same store, under a dedicated ``"plan"`` fingerprint component —
 # the planner analogue of the "analytic"/"measured" trial kinds, so a
 # plan record can never satisfy a schedule lookup or vice versa.  The
-# payload is the planner's own JSON form (planner.plan_to_json); this
-# module only frames it with the schema/key cross-checks every other
-# record gets.  Same invalidation story: SCHEMA_VERSION, MODEL_VERSION
-# and the hardware constants are folded into the path hash, and the
-# caller's key carries PLANNER_VERSION.
+# key is ``planner.plan_key``: ("plan", PLANNER_VERSION, config
+# fingerprint, batch, seq, stitch, hw, mesh, phase, paged, kv_len) —
+# the phase/paged/kv_len tail (v2) keys the serving DAG variants
+# (prefill/decode over a paged cache) separately from the cache-free
+# forward, so a serving relaunch replays its decode plan without
+# re-carving.  The payload is the planner's own JSON form
+# (planner.plan_to_json); this module only frames it with the
+# schema/key cross-checks every other record gets.  Same invalidation
+# story: SCHEMA_VERSION, MODEL_VERSION and the hardware constants are
+# folded into the path hash, and the caller's key carries
+# PLANNER_VERSION.
 
 def plan_entry_path(key: tuple, hw: TpuSpec) -> Path:
     blob = json.dumps([list(key), model_fingerprint(hw), "plan"],

@@ -30,7 +30,9 @@ from ..dist import ring_dispatch
 from ..dist.sharding import Rules, default_rules, dispatch_mesh_spec
 from . import ref
 from .attention import fused_attention as _attn_kernel
+from .gemm_chain import _ACTS
 from .gemm_chain import fused_gemm_chain as _gemm_kernel
+from .gemm_chain import fused_mlp_chain as _mlp_chain_kernel
 
 
 def _backend_mode(mode: str) -> str:
@@ -81,6 +83,51 @@ def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
                                  dtype=str(a.dtype), interpret=interp)
         return tk(a, b, d)
     return _gemm_kernel(a, b, d, interpret=interp)
+
+
+def mlp_chain(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+              w_gate: Optional[jax.Array] = None, act: str = "silu",
+              mode: str = "auto", tuned: bool = True,
+              interpret: Optional[bool] = None,
+              prologue=None, epilogue=None) -> jax.Array:
+    """Fused E = (act(X@Wg) * (X@Wu)) @ Wd with MCFuser-tuned schedule
+    (``w_gate=None`` computes the ungated E = act(X@Wu) @ Wd).
+
+    x: (M, K); w_up/w_gate: (K, N); w_down: (N, H).  This is the
+    planner executor's MLP dispatch point
+    (``models/layers.run_planned_layer`` under
+    ``Runtime(kernel_ops=True, planner=True)``): a planner-carved MLP
+    chain executes the same ``gemm_chain.fused_mlp_chain`` schedule
+    ``core.api.fuse_mlp_chain`` priced, instead of its XLA twin.
+
+    mode: "auto" | "kernel" | "interpret" | "ref".  Ref mode is the
+    exact XLA twin of ``models/layers.mlp_block``'s op sequence.
+    ``prologue``/``epilogue`` are the tile-local FusionStitching hooks,
+    forwarded to the kernel (applied whole-array in ref mode).
+    """
+    m = _backend_mode(mode)
+    gated = w_gate is not None
+    if m == "ref":
+        h = x if prologue is None else prologue(x)
+        if gated:
+            hid = _ACTS[act](h @ w_gate) * (h @ w_up)
+        else:
+            hid = _ACTS[act](h @ w_up)
+        e = hid @ w_down
+        return e if epilogue is None else epilogue(e)
+    M, K = x.shape
+    N, H = w_up.shape[-1], w_down.shape[-1]
+    interp = (m == "interpret") if interpret is None else interpret
+    kw = {}
+    if tuned:
+        tk = api.fuse_mlp_chain(M, N, H, batch=1, dtype=str(x.dtype),
+                                gated=gated, act=act, interpret=interp)
+        kw = tk.params.as_kwargs()
+    out = _mlp_chain_kernel(
+        x[None], w_up[None], w_down[None],
+        wg=w_gate[None] if gated else None, act=act,
+        prologue=prologue, epilogue=epilogue, interpret=interp, **kw)
+    return out[0]
 
 
 def _gemm_body(M, N, K, H, batch, dtype, m, tuned, interp,

@@ -254,12 +254,15 @@ def planner_chain_report(cfg, shape, mesh=None, rules=None) -> dict:
     groups stay fused MBCI chains, which split compute-bound, and
     where memory-bound glue got stitched — so a sweep record shows the
     planner's decisions next to the roofline they price into.  Plans
-    replay from core.schedule_cache across cells.  Decode shapes and
-    non-plannable archs report ``{"plannable": False}``.
+    replay from core.schedule_cache across cells.  Decode shape cells
+    trace the ``phase="decode"`` DAG (one query row against a
+    ``shape.seq``-long cache — the serving steady state, with its
+    ``kv_write`` node standalone); other kinds trace the cache-free
+    forward.  Non-plannable archs report ``{"plannable": False}``.
     """
     from ..core import planner
 
-    if shape.kind == "decode" or not planner.plannable(cfg):
+    if not planner.plannable(cfg):
         return {"plannable": False}
     spec = None
     if mesh is not None:
@@ -269,7 +272,11 @@ def planner_chain_report(cfg, shape, mesh=None, rules=None) -> dict:
                                feature_dim=cfg.n_kv_heads)
         if spec.is_single:
             spec = None
-    plan = planner.plan_model(cfg, shape.batch, shape.seq, mesh=spec)
+    if shape.kind == "decode":
+        plan = planner.plan_model(cfg, shape.batch, 1, mesh=spec,
+                                  phase="decode", kv_len=shape.seq)
+    else:
+        plan = planner.plan_model(cfg, shape.batch, shape.seq, mesh=spec)
     chains = [{
         "kind": c.kind, "ops": list(c.ops), "fused": c.fused,
         "ai": round(c.ai, 1),
@@ -277,6 +284,7 @@ def planner_chain_report(cfg, shape, mesh=None, rules=None) -> dict:
     } for c in plan.layer.chains]
     return {
         "plannable": True,
+        "phase": plan.phase,
         "ridge": round(planner.ridge_intensity(), 1),
         "chains": chains,
         "n_fused": sum(1 for c in plan.layer.chains if c.fused),

@@ -530,6 +530,38 @@ def paged_attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
     scale = 1.0 / math.sqrt(dh)
     group = cfg.n_heads // cfg.n_kv_heads
 
+    o = _paged_attention_body(qt, cache, page_table, positions,
+                              group=group, win=win, scale=scale,
+                              rules=rules, mesh=mesh,
+                              dist_decode=dist_decode,
+                              kernel_ops=kernel_ops, block=block)
+
+    o = constrain(o, rules, "batch", "tp", None, None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return constrain(out, rules, "batch", "seq", None), cache
+
+
+def _paged_attention_body(qt: jax.Array, cache: dict,
+                          page_table: jax.Array, positions: jax.Array,
+                          *, group: int, win: int, scale: float,
+                          rules: Rules,
+                          mesh: Optional[jax.sharding.Mesh] = None,
+                          dist_decode: bool = False,
+                          kernel_ops: bool = False,
+                          block: Optional[tuple] = None) -> jax.Array:
+    """The three-body paged attention core — ring regime, fused paged
+    kernel, or the XLA gather twin; one semantics (docs/design.md §3).
+    Shared verbatim by the hand-wired ``paged_attention_block`` and the
+    planner executor (``run_planned_layer``), so a planned serving step
+    is bit-identical to the hand-wired one by construction.
+
+    qt: (B, Hq, S, dh) already transposed+constrained; cache holds the
+    POST-write page pools."""
+    from ..serving import kv_pages as KP
+
+    b, _, s, _ = qt.shape
+    ps = cache["k_pages"].shape[2]
     nm = mesh.shape[rules.model] if (mesh is not None and rules.model) else 1
     mp = page_table.shape[1]
     if (dist_decode and rules.enabled and mesh is not None and rules.model
@@ -537,33 +569,28 @@ def paged_attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
         from ..dist.ring_dispatch import paged_ring_decode_attention
         bspec = rules.batch_spec(b, mesh)
         baxes = bspec[0] if len(bspec) else None
-        o = paged_ring_decode_attention(
+        return paged_ring_decode_attention(
             qt, cache["k_pages"], cache["v_pages"], page_table,
             positions[:, 0], window=win, scale=scale, rules=rules,
             mesh=mesh, batch_axes=baxes)
-    elif kernel_ops and s == 1 and jax.default_backend() == "tpu":
+    if kernel_ops and s == 1 and jax.default_backend() == "tpu":
         # decode only: the kernel's tail convention needs q rows at
         # lengths-M..lengths-1, which padded prefill rows violate.
         # ``block`` carries the regime search's winning tiles, so the
         # executed schedule is the one the model priced.
         from ..kernels.attention import fused_attention_paged
         bq, bkv = block if block is not None else (128, 128)
-        o = fused_attention_paged(qt, cache["k_pages"], cache["v_pages"],
-                                  page_table, positions[:, -1] + 1,
-                                  bq=bq, bkv=bkv, window=win, scale=scale)
-    else:
-        kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
-                        group, axis=1)
-        vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),
-                        group, axis=1)
-        kv_pos = KP.paged_kv_positions(page_table, ps)
-        o = _paged_positional_attention(qt, kk, vv, positions, kv_pos,
-                                        win, scale)
-
-    o = constrain(o, rules, "batch", "tp", None, None)
-    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * dh)
-    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
-    return constrain(out, rules, "batch", "seq", None), cache
+        return fused_attention_paged(qt, cache["k_pages"],
+                                     cache["v_pages"], page_table,
+                                     positions[:, -1] + 1, bq=bq,
+                                     bkv=bkv, window=win, scale=scale)
+    kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
+                    group, axis=1)
+    vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),
+                    group, axis=1)
+    kv_pos = KP.paged_kv_positions(page_table, ps)
+    return _paged_positional_attention(qt, kk, vv, positions, kv_pos,
+                                       win, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -609,29 +636,60 @@ def mlp_block(p: dict, x: jax.Array, cfg: ModelConfig, rules: Rules) -> jax.Arra
 # ---------------------------------------------------------------------------
 
 def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
-                      rules: Rules, *, positions: jax.Array,
-                      rt) -> jax.Array:
+                      rules: Rules, *, positions: jax.Array, rt,
+                      cache: Optional[dict] = None,
+                      page_table: Optional[jax.Array] = None
+                      ) -> tuple[jax.Array, Optional[dict]]:
     """Execute one attention block from a planner ``LayerPlan`` — the
     zero-hand-specified-chains path behind ``Runtime(planner=True)``.
 
     Walks the plan's op DAG; every node dispatches to the *same* jnp
-    code ``_apply_layer``'s hand-wired path runs (attention_block +
-    mlp_block twins, verbatim), so a stitch-disabled plan is
-    bit-identical to the hand-wired layer.  Glue stitched into a carved
-    chain as prologue/epilogue instead executes in f32 (the ``_*_f32``
-    twins — what a fused kernel's VMEM-resident epilogue computes in)
-    with ONE downcast at the carved unit's boundary; on float32 configs
-    that is still bitwise identical, on bf16 it differs only by where
-    rounding lands (docs/planner.md).
+    code ``_apply_layer``'s hand-wired path runs (attention_block /
+    paged_attention_block + mlp_block twins, verbatim), so a
+    stitch-disabled plan is bit-identical to the hand-wired layer.
+    Glue stitched into a carved chain as prologue/epilogue instead
+    executes in f32 (the ``_*_f32`` twins — what a fused kernel's
+    VMEM-resident epilogue computes in) with ONE downcast at the carved
+    unit's boundary; on float32 configs that is still bitwise
+    identical, on bf16 it differs only by where rounding lands
+    (docs/planner.md).
+
+    Serving phases: a plan traced with ``phase="prefill"``/``"decode"``
+    carries a ``kv_write`` node — pass the paged ``cache``
+    ({"k_pages","v_pages"}) and ``page_table`` and the walk scatters
+    this step's k/v through ``serving.kv_pages`` then runs the shared
+    ``_paged_attention_body`` (ring / fused paged kernel / XLA twin —
+    the same three-body dispatch the hand-wired block uses).
+    Contiguous (non-paged) caches are priced by the planner but not
+    executed here; ``models/lm.py`` keeps them hand-wired.
+
+    Kernel dispatch: under ``rt.kernel_ops`` a *fused* planner-carved
+    MLP chain routes through ``kernels.ops.mlp_chain`` (the tuned
+    ``gemm_chain.fused_mlp_chain`` schedule on TPU, its XLA twin
+    elsewhere); its stitched prologue/epilogue (ln2/res2) still
+    execute f32-wide around the kernel call, exactly as in the node
+    walk.
 
     lp: ``core.planner.LayerPlan`` (duck-typed; no core import here).
     p: the layer's param pytree ({"ln1","mix","ln2","ff"}).
+    Returns ``(out, cache)`` — cache is the post-write pool dict for
+    serving plans, or the ``cache`` argument passed in (None for the
+    cache-free forward).
     """
+    from ..serving import kv_pages as KP
+
     b, s, d = x.shape
     dh = cfg.dh
     dt = x.dtype
     pm, pf = p["mix"], p["ff"]
     win = cfg.window
+    paged = cache is not None
+    if paged and "k_pages" not in cache:
+        raise ValueError("run_planned_layer executes paged serving "
+                         "caches only; contiguous caches stay on the "
+                         "hand-wired path (models/lm.py)")
+    if paged and page_table is None:
+        raise ValueError("paged cache requires a page_table")
 
     stitched: set = set()
     downcast_at: set = set()
@@ -644,9 +702,42 @@ def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
             # HBM store would round
             downcast_at.add(c.epilogue[-1] if c.epilogue else c.ops[-1])
 
+    # Under kernel_ops, a fused MLP chain executes as ONE tuned kernel
+    # call at its first op; the folded ops are skipped in the walk.
+    mlp_unit = None
+    mlp_folded: set = set()
+    if rt.kernel_ops:
+        mlp_unit = next((c for c in lp.chains
+                         if c.kind == "mlp" and c.fused), None)
+        if mlp_unit is not None:
+            mlp_folded = set(mlp_unit.ops[1:])
+
     env: dict = {"x": x}
     for node in lp.nodes:
         nm, role, ins = node.name, node.role, node.ins
+        if nm in mlp_folded:
+            continue
+        if mlp_unit is not None and nm == mlp_unit.ops[0]:
+            from ..kernels import ops as kernel_ops_mod
+            x2d = env[ins[0]].reshape(b * s, d)
+            gated = cfg.act in ("swiglu", "geglu")
+            wu, wd = pf["w_up"], pf["w_down"]
+            wg = pf["w_gate"] if gated else None
+            if wu.dtype != x2d.dtype:
+                # a stitched ln2 prologue leaves x f32-wide; promote
+                # the weights the way the XLA twin's matmul would
+                wu, wd = wu.astype(x2d.dtype), wd.astype(x2d.dtype)
+                wg = wg if wg is None else wg.astype(x2d.dtype)
+            o2d = kernel_ops_mod.mlp_chain(
+                x2d, wu, wd, w_gate=wg,
+                act="silu" if cfg.act == "swiglu" else "gelu")
+            out = constrain(o2d.reshape(b, s, d), rules,
+                            "batch", None, None)
+            nm = mlp_unit.ops[-1]
+            if nm in downcast_at:
+                out = out.astype(dt)
+            env[nm] = out
+            continue
         if role == "norm":
             val = env[ins[0]]
             pn = p[nm]    # DAG node names ln1/ln2 mirror the param keys
@@ -687,25 +778,54 @@ def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
             out = (_rope_f32(val, positions, cfg.rope_theta)
                    if nm in stitched
                    else rope(val, positions, cfg.rope_theta))
+        elif role == "kv_write":
+            # scatter this step's k/v through to the paged pool — the
+            # hand-wired block's write-through, verbatim (masked rows
+            # land on the scratch page, serving/kv_pages.py); the
+            # attention core then reads the cache, not these tensors
+            if not paged:
+                raise ValueError("kv_write node requires a paged cache")
+            phys, off = KP.slot_coords(page_table, positions,
+                                       cache["k_pages"].shape[2])
+            cache = {
+                "k_pages": KP.scatter_pages(
+                    cache["k_pages"], phys, off,
+                    env[ins[0]].astype(cache["k_pages"].dtype)),
+                "v_pages": KP.scatter_pages(
+                    cache["v_pages"], phys, off,
+                    env[ins[1]].astype(cache["v_pages"].dtype)),
+            }
+            out = None
         elif role == "attn_qk":
             # the attention core executes as one unit here (fused chain
             # or not — fusion changes pricing and TPU kernel dispatch,
             # not the XLA twin): attention_block's cache-free
-            # mid-section, verbatim
+            # mid-section — or, for a serving plan, the shared
+            # ``_paged_attention_body`` — verbatim
             q = constrain(env[ins[0]].transpose(0, 2, 1, 3), rules,
                           "batch", "tp", None, None)
-            k = constrain(env[ins[1]].transpose(0, 2, 1, 3), rules,
-                          "batch", None, None, None)
-            v = constrain(env["wv"].transpose(0, 2, 1, 3), rules,
-                          "batch", None, None, None)
             scale = 1.0 / math.sqrt(dh)
             group = cfg.n_heads // cfg.n_kv_heads
-            if rt.kernel_ops and s > 1:
+            if paged:
+                o = _paged_attention_body(
+                    q, cache, page_table, positions, group=group,
+                    win=win, scale=scale, rules=rules, mesh=rt.mesh,
+                    dist_decode=rt.dist_decode_attn,
+                    kernel_ops=rt.kernel_ops, block=rt.paged_block)
+            elif rt.kernel_ops and s > 1:
                 from ..kernels import ops as kernel_ops_mod
+                k = constrain(env[ins[1]].transpose(0, 2, 1, 3), rules,
+                              "batch", None, None, None)
+                v = constrain(env["wv"].transpose(0, 2, 1, 3), rules,
+                              "batch", None, None, None)
                 o = kernel_ops_mod.attention(
                     q, k, v, causal=True, window=win, scale=scale,
                     mesh=rt.mesh if rules.enabled else None, rules=rules)
             else:
+                k = constrain(env[ins[1]].transpose(0, 2, 1, 3), rules,
+                              "batch", None, None, None)
+                v = constrain(env["wv"].transpose(0, 2, 1, 3), rules,
+                              "batch", None, None, None)
                 kk = jnp.repeat(k, group, axis=1)
                 vv = jnp.repeat(v, group, axis=1)
                 if cfg.use_fused_attention and s > 2 * rt.bkv:
@@ -742,7 +862,8 @@ def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
         env[nm] = out
 
     out = env[lp.nodes[-1].name]
-    return out.astype(dt) if out.dtype != dt else out
+    out = out.astype(dt) if out.dtype != dt else out
+    return out, cache
 
 
 # ---------------------------------------------------------------------------

@@ -56,9 +56,11 @@ class Runtime:
     # path executes the schedule the tuner priced (docs/serving.md).
     planner: bool = False   # run attention blocks from core.planner
     # output — chains carved + glue stitched from the config alone,
-    # zero hand-specified chains (docs/planner.md).  Cache-free forward
-    # only; prefill/decode and non-plannable configs fall back to the
-    # hand-wired path.
+    # zero hand-specified chains (docs/planner.md).  Covers the
+    # cache-free forward AND paged serving (prefill_paged /
+    # decode_step_paged trace phase-keyed DAGs with an explicit
+    # kv_write node); contiguous-cache decode and non-plannable
+    # configs fall back to the hand-wired path.
     stitch: bool = True     # planner mode only: stitch memory-bound
     # glue into carved chains as prologue/epilogue (FusionStitching).
     # False keeps every glue op standalone — bit-identical to the
@@ -232,16 +234,27 @@ class LM:
                      page_table: Optional[jax.Array] = None
                      ) -> tuple[jax.Array, Any]:
         cfg, rt = self.cfg, self.rt
-        if (rt.planner and kind == "attn" and cache is None
-                and page_table is None):
+        paged = (cache is not None and page_table is not None
+                 and "k_pages" in cache)
+        if (rt.planner and kind == "attn"
+                and ((cache is None and page_table is None) or paged)):
             from ..core import planner as planner_mod
             if planner_mod.plannable(cfg):
-                plan = planner_mod.plan_model(
-                    cfg, int(x.shape[0]), int(x.shape[1]),
-                    stitch=rt.stitch)
+                b_, s_ = int(x.shape[0]), int(x.shape[1])
+                if paged:
+                    ps_ = int(cache["k_pages"].shape[2])
+                    plan = planner_mod.plan_model(
+                        cfg, b_, s_, stitch=rt.stitch,
+                        phase="prefill" if s_ > 1 else "decode",
+                        paged=ps_,
+                        kv_len=int(page_table.shape[1]) * ps_)
+                else:
+                    plan = planner_mod.plan_model(cfg, b_, s_,
+                                                  stitch=rt.stitch)
                 return L.run_planned_layer(
                     plan.layer, p, x, cfg, rt.rules,
-                    positions=positions, rt=rt), None
+                    positions=positions, rt=rt, cache=cache,
+                    page_table=page_table)
         h = L.apply_norm(p["ln1"], x, cfg)
         if kind == "attn":
             win = cfg.window

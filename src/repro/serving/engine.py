@@ -100,6 +100,12 @@ class ServingEngine:
     page_size / n_pages: the pool (page 0 is scratch, so ``n_pages - 1``
     are allocatable).  max_pages_per_seq: page-table width; a request
     may span at most ``max_pages_per_seq * page_size`` positions.
+
+    A model built with ``Runtime(planner=True)`` serves planner-carved
+    blocks: prefill and decode steps execute phase-keyed plans from
+    ``core.planner`` (decode pre-planned at construction), bit-identical
+    to the hand-wired paged path on f32 configs with stitching off
+    (docs/planner.md §7, tests/test_serving.py).
     """
 
     def __init__(self, model, params, *, max_batch: int = 4,
@@ -144,6 +150,19 @@ class ServingEngine:
         self.cache = model.init_paged_cache(n_pages, page_size)
         self._decode = jax.jit(model.decode_step_paged)
         self._prefill = jax.jit(model.prefill_paged)
+        if model.rt.planner:
+            # Pre-plan the steady-state decode DAG at construction so
+            # the first serving step never pays the carve: every later
+            # decode_step_paged hits the plan memo (and relaunches
+            # replay the ("plan", …, phase, paged) disk record —
+            # core/schedule_cache.py).  Prefill shapes vary per prompt
+            # and are planned (then memoized) on first sight.
+            from ..core import planner as planner_mod
+            if planner_mod.plannable(model.cfg):
+                planner_mod.plan_model(
+                    model.cfg, self.max_batch, 1,
+                    stitch=model.rt.stitch, phase="decode",
+                    paged=self.page_size, kv_len=self.n_ctx)
 
     # ------------------------------------------------------------------
     def _choose_regime(self, model):

@@ -181,6 +181,32 @@ def test_golden_fixture_current():
         assert payload["version"] == planner.PLANNER_VERSION
 
 
+def test_golden_phase_plans_current():
+    """Serving-phase fixtures (decode / prefill over a paged cache)
+    match today's planner output byte-for-byte, including the phase /
+    paged / kv_len identity the v2 fingerprint keys on."""
+    golden = json.loads(
+        (Path(__file__).parent / "golden_plans.json").read_text())
+    assert golden["phase_plans"], "fixture must pin serving phases"
+    seen = set()
+    for entry in golden["phase_plans"]:
+        cfg = get_config(entry["arch"], smoke=entry["smoke"])
+        plan = planner.plan_model(
+            cfg, entry["batch"], entry["seq"], stitch=entry["stitch"],
+            phase=entry["phase"], paged=entry["paged"],
+            kv_len=entry["kv_len"], use_cache=False)
+        payload = planner.plan_to_json(plan)
+        assert payload == entry["plan"], (entry["arch"], entry["phase"])
+        assert payload["phase"] == entry["phase"]
+        assert payload["paged"] == entry["paged"]
+        assert payload["kv_len"] == entry["kv_len"]
+        # the serving DAG's cache write is always standalone glue
+        assert "kv_write" in entry["plan"]["layer"]["glue"]
+        seen.add((entry["smoke"], entry["phase"]))
+    assert seen == {(False, "decode"), (False, "prefill"),
+                    (True, "decode"), (True, "prefill")}
+
+
 def test_golden_qwen3_decisions():
     """Spot-check the load-bearing decisions the fixture pins: fused
     MBCI attention, split compute-bound FULL MLP, qk_norm+rope stitched
@@ -265,6 +291,68 @@ def test_property_planning_deterministic(arch, batch, seq, stitch):
     assert planner.plan_to_json(a) == planner.plan_to_json(b)
 
 
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(PLANNABLE),
+       batch=st.integers(1, 4),
+       phase=st.sampled_from(["prefill", "decode"]),
+       paged=st.sampled_from([None, 4, 16]),
+       stitch=st.booleans(),
+       mesh_i=st.integers(0, len(_MESHES) - 1))
+def test_property_serving_phases_partition(arch, batch, phase, paged,
+                                           stitch, mesh_i):
+    """Serving-phase DAGs (prefill / decode, contiguous and paged) obey
+    the same carve invariants as the forward: chains + glue partition
+    the op DAG, fused chains are MBCI, and the cache write (kv_write)
+    is always standalone glue — never stitched into a carved unit."""
+    cfg = get_config(arch, smoke=True)
+    seq = 1 if phase == "decode" else 8
+    kv_len = 32
+    plan = planner.plan_model(cfg, batch, seq, stitch=stitch,
+                              mesh=_MESHES[mesh_i], phase=phase,
+                              paged=paged, kv_len=kv_len,
+                              use_cache=False)
+    covered = []
+    for c in plan.layer.chains:
+        covered += list(c.ops) + list(c.prologue) + list(c.epilogue)
+    covered += list(plan.layer.glue)
+    assert sorted(covered) == sorted(n.name for n in plan.layer.nodes)
+    assert "kv_write" in plan.layer.glue
+    for c in plan.layer.chains:
+        assert "kv_write" not in c.prologue + c.epilogue
+        if c.fused:
+            assert c.ai < planner.ridge_intensity(V5E), (c.kind, c.ai)
+    assert plan.phase == phase and plan.paged == paged
+    assert plan.kv_len == kv_len
+
+
+@settings(max_examples=10, deadline=None)
+@given(arch=st.sampled_from(PLANNABLE),
+       batch=st.integers(1, 4),
+       phase=st.sampled_from(["prefill", "decode"]),
+       paged=st.sampled_from([None, 4, 16]),
+       mesh_i=st.integers(0, len(_MESHES) - 1))
+def test_property_serving_planning_deterministic(arch, batch, phase,
+                                                 paged, mesh_i):
+    """Fixed (config, phase, mesh, page size) -> identical serving
+    plan every time, and a distinct fingerprint per phase/page-size so
+    cached decode plans can never serve a prefill lookup."""
+    cfg = get_config(arch, smoke=True)
+    seq = 1 if phase == "decode" else 8
+    kw = dict(mesh=_MESHES[mesh_i], phase=phase, paged=paged,
+              kv_len=32, use_cache=False)
+    a = planner.plan_model(cfg, batch, seq, **kw)
+    b = planner.plan_model(cfg, batch, seq, **kw)
+    assert a == b
+    assert planner.plan_to_json(a) == planner.plan_to_json(b)
+    key = planner.plan_key(cfg, batch, seq, True, V5E,
+                           _MESHES[mesh_i], phase, paged, 32)
+    other = "prefill" if phase == "decode" else "decode"
+    assert key != planner.plan_key(cfg, batch, seq, True, V5E,
+                                   _MESHES[mesh_i], other, paged, 32)
+    assert key != planner.plan_key(cfg, batch, seq, True, V5E,
+                                   _MESHES[mesh_i], phase, 8, 32)
+
+
 # ---------------------------------------------------------------------------
 # Stitched kernel hooks (kernels/gemm_chain.py, kernels/attention.py)
 # ---------------------------------------------------------------------------
@@ -322,5 +410,49 @@ def test_attention_hooks_interpret():
                           o_epilogue=lambda x: x + 1.0)
     ref = fused_attention(q * 2.0, k, v, causal=True, bq=64, bkv=64,
                           interpret=True) + 1.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Kernel dispatch oracle: planned MLP chains through fused_mlp_chain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stitch", [False, True])
+def test_planned_mlp_kernel_dispatch_oracle(monkeypatch, stitch):
+    """Runtime(kernel_ops=True, planner=True) must route the planner's
+    fused MLP chain through kernels.gemm_chain.fused_mlp_chain (asserted
+    by counting kernel entries), and the kernel path — interpret mode,
+    the hardware twin — must match the XLA node walk it replaces, with
+    the stitched ln2 prologue / res2 epilogue surviving the dispatch."""
+    from repro.kernels import ops
+    from repro.models import layers as L
+
+    cfg = get_config("qwen3_8b", smoke=True)
+    plan = planner.plan_model(cfg, BATCH, SEQ, stitch=stitch,
+                              use_cache=False)
+    mlp = next(c for c in plan.layer.chains if c.kind == "mlp")
+    assert mlp.fused, "smoke MLP must carve as one MBCI chain"
+
+    rt_ref = Runtime(remat=False, planner=True, stitch=stitch)
+    params = S.build_model(cfg, Runtime(remat=False)).init_params(
+        jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda a: a[0], params["stack"]["b0_attn"])
+    x = jax.random.normal(jax.random.PRNGKey(3),
+                          (BATCH, SEQ, cfg.d_model)).astype(cfg.dtype)
+    positions = jnp.arange(SEQ, dtype=jnp.int32)
+    ref, _ = L.run_planned_layer(plan.layer, p, x, cfg, rt_ref.rules,
+                                 positions=positions, rt=rt_ref)
+
+    calls = []
+    real = ops._mlp_chain_kernel
+    monkeypatch.setattr(ops, "_backend_mode", lambda mode: "interpret")
+    monkeypatch.setattr(ops, "_mlp_chain_kernel",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    rt_k = Runtime(remat=False, planner=True, stitch=stitch,
+                   kernel_ops=True)
+    out, _ = L.run_planned_layer(plan.layer, p, x, cfg, rt_k.rules,
+                                 positions=positions, rt=rt_k)
+    assert len(calls) == 1, "planned MLP chain must enter the kernel"
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=3e-4, atol=1e-3)

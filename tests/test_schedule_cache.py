@@ -269,6 +269,38 @@ def test_plan_golden_replay(tmp_path, monkeypatch, _planner):
         monkeypatch.undo()
 
 
+def test_plan_golden_phase_replay(tmp_path, monkeypatch, _planner):
+    """Serving-phase golden decisions (decode / prefill over a paged
+    cache) replay byte-for-byte through the cache under the extended
+    ("plan", ..., phase, paged, kv_len) fingerprint — a serving restart
+    never re-carves its decode plan."""
+    from pathlib import Path
+    from repro.configs import get_config
+
+    planner = _planner
+    golden = json.loads(
+        (Path(__file__).parent / "golden_plans.json").read_text())
+    assert golden["phase_plans"]
+    for entry in golden["phase_plans"]:
+        cfg = get_config(entry["arch"], smoke=entry["smoke"])
+        b, s = entry["batch"], entry["seq"]
+        kw = dict(stitch=entry["stitch"], phase=entry["phase"],
+                  paged=entry["paged"], kv_len=entry["kv_len"])
+        fresh = planner.plan_model(cfg, b, s, use_cache=False, **kw)
+        assert planner.plan_to_json(fresh) == entry["plan"], entry["phase"]
+
+        planner.clear_memo()
+        key = planner.plan_key(cfg, b, s, entry["stitch"], V5E, None,
+                               entry["phase"], entry["paged"],
+                               entry["kv_len"])
+        schedule_cache.store_plan(key, V5E, entry["plan"])
+        _forbid_carve(monkeypatch, planner)
+        replayed = planner.plan_model(cfg, b, s, **kw)
+        assert planner.plan_to_json(replayed) == entry["plan"], \
+            entry["phase"]
+        monkeypatch.undo()
+
+
 def test_plan_records_disjoint_from_schedules(tmp_path, _planner):
     """A plan record can never satisfy a schedule lookup or vice versa
     (the "plan" fingerprint component, like analytic vs measured)."""
@@ -293,8 +325,13 @@ def test_plan_version_bump_invalidates(_planner):
     planner = _planner
     cfg = get_config("qwen3_8b", smoke=True)
     k1 = planner.plan_key(cfg, 2, 64, True)
+    kd = planner.plan_key(cfg, 4, 1, True, V5E, None, "decode", 16, 512)
+    assert kd[8] == "decode" and kd != k1
     try:
         planner.PLANNER_VERSION += 1
         assert planner.plan_key(cfg, 2, 64, True) != k1
+        # phase-keyed serving records are orphaned by the same bump
+        assert planner.plan_key(cfg, 4, 1, True, V5E, None,
+                                "decode", 16, 512) != kd
     finally:
         planner.PLANNER_VERSION -= 1

@@ -31,7 +31,7 @@ from repro.core.perf_model import (MeshSpec, paged_gather_bytes,
 from repro.kernels.attention import (fused_attention, fused_attention_paged,
                                      fused_attention_partial)
 from repro.dist.ring_dispatch import finalize_partials
-from repro.models.lm import LM
+from repro.models.lm import LM, Runtime
 from repro.serving import ServingEngine
 from repro.serving import kv_pages as KP
 
@@ -363,6 +363,76 @@ def test_engine_rejects_non_attention_arch():
     model = LM(cfg)
     with pytest.raises(NotImplementedError):
         model.init_paged_cache(8, 4)
+
+
+# ---------------------------------------------------------------------------
+# planner-served traffic: Runtime(planner=True) through the engine
+# (core/planner.py decode/prefill DAGs executed by run_planned_layer)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def _plan_cache(tmp_path, monkeypatch):
+    """Isolate planner memo + disk records from the user's real cache."""
+    from repro.core import planner
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    planner.clear_memo()
+    yield planner
+    planner.clear_memo()
+
+
+@pytest.mark.parametrize("stitch", [False, True])
+def test_engine_planner_matches_hand_wired(stitch, _plan_cache):
+    """The planner-served engine — prefill and decode blocks executed
+    from carved phase-keyed plans — emits token streams bit-identical
+    to the hand-wired paged path on this f32 config, across ragged
+    lengths, with stitching off AND on (stitched glue's one boundary
+    downcast is a no-op on float32)."""
+    planner = _plan_cache
+    hand = LM(CFG)
+    params = hand.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, CFG.vocab, size=int(rng.randint(3, 14)))
+             .astype(np.int32), int(g))
+            for g in (3, 9, 1, 6, 12, 2)]
+    kw = dict(max_batch=3, page_size=4, n_pages=32, max_pages_per_seq=8,
+              choose_regime=False)
+    base, _ = ServingEngine(hand, params, **kw).run(reqs)
+
+    planned = LM(CFG, Runtime(planner=True, stitch=stitch))
+    eng = ServingEngine(planned, params, **kw)
+    results, stats = eng.run(reqs)
+    assert [r.tokens for r in results] == [r.tokens for r in base]
+    assert stats["generated"] == sum(g for _, g in reqs)
+    # both serving phases actually planned (phase at key index 8)
+    phases = {k[8] for k in planner._PLAN_MEMO}
+    assert {"prefill", "decode"} <= phases
+    assert eng.pool.n_free == eng.pool.n_pages - 1
+    if not stitch:
+        ref = _reference_serve(hand, params, reqs, eng.n_ctx)
+        for r, want in zip(results, ref):
+            assert r.tokens == want
+
+
+def test_engine_planner_preemption_recovers(_plan_cache):
+    """Preemption + recompute-prefill through planner-served blocks:
+    same recovery semantics and the same tokens as the hand-wired
+    engine under identical memory pressure."""
+    hand = LM(CFG)
+    params = hand.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    reqs = [(rng.randint(0, CFG.vocab, size=6).astype(np.int32), 10)
+            for _ in range(4)]
+    kw = dict(max_batch=4, page_size=4, n_pages=10, max_pages_per_seq=4,
+              choose_regime=False)
+    base, base_stats = ServingEngine(hand, params, **kw).run(reqs)
+    assert base_stats["preemptions"] > 0
+
+    eng = ServingEngine(LM(CFG, Runtime(planner=True)), params, **kw)
+    results, stats = eng.run(reqs)
+    assert stats["preemptions"] > 0
+    assert [len(r.tokens) for r in results] == [10] * 4
+    assert [r.tokens for r in results] == [r.tokens for r in base]
+    assert eng.pool.n_free == eng.pool.n_pages - 1
 
 
 # ---------------------------------------------------------------------------
