@@ -1,0 +1,87 @@
+"""Chaos smoke lane: one injected fault per class, tokens unchanged
+(repro.reliability; docs/reliability.md).
+
+Wired into ``benchmarks/run.py --smoke`` as CI's graceful-degradation
+gate.  For every fault class in ``repro.reliability.faults.FAULT_KINDS``
+it serves the shared ragged workload three times (baseline, faulted,
+relaunch — see ``repro.reliability.chaos.run_chaos``) and asserts:
+
+  * the armed fault actually fired (a chaos lane that injects nothing
+    is a green light lying about coverage);
+  * every request completed and the served tokens are bit-identical to
+    the fault-free run — degradation moves work to a fallback tier or
+    a requeue, never to different numerics (f32, stitching off);
+  * the step watchdog saw no breach under a generous budget — fallback
+    must not livelock the scheduler.
+
+Not a timing benchmark: there is nothing to measure, only invariants
+to hold, so it runs in the smoke lane only (``main()`` just delegates).
+"""
+import sys
+
+from repro.reliability import chaos
+
+#: Generous per-step budget for shared CI runners: a breach here means
+#: a stuck fallback loop, not a slow host.
+WATCHDOG_S = 60.0
+
+#: (kind, inject_kw, run_chaos kwargs) — one scenario per fault class,
+#: each armed on the production seam it targets.
+SCENARIOS = [
+    # fused tail raises at dispatch -> breaker quarantines the plan
+    # fingerprint, engine demotes to the XLA twin
+    ("kernel_dispatch", {"nth": 0}, dict(planner=True)),
+    # planner record unreadable at construction -> quarantined to
+    # *.corrupt, plan re-carved once
+    ("plan_load", {"nth": 0}, dict(planner=True)),
+    # tuned-schedule record unreadable while pricing the paged regime
+    ("cache_corrupt", {"nth": 0}, dict(choose_regime=True)),
+    # allocator denies a would-succeed page grab -> admission requeue /
+    # vLLM-style preemption, never a crash
+    ("page_exhaustion", {"nth": 2}, dict()),
+    # whole jitted step raises once -> sticky demotion down the tier
+    # chain, same tokens from the twin
+    ("engine_step", {"nth": 0}, dict()),
+]
+
+
+def smoke() -> int:
+    failures = []
+    for kind, inject_kw, kw in SCENARIOS:
+        out = chaos.run_chaos(kind, inject_kw, watchdog_s=WATCHDOG_S,
+                              **kw)
+        f, r = out.faulted_stats, out.relaunch_stats
+        print(f"smoke chaos: {kind} fired={out.fired} "
+              f"identical={out.tokens_identical} "
+              f"tier={f['exec_tier']} demotions={f['tier_demotions']} "
+              f"requeues={f['admit_requeues']} "
+              f"breaches={f['watchdog_breaches']}")
+        if out.fired < 1:
+            failures.append(f"{kind}: armed fault never fired — the "
+                            "injection seam is dead")
+        if not out.tokens_identical:
+            failures.append(f"{kind}: served tokens diverged from the "
+                            "fault-free run")
+        for phase, stats in (("faulted", f), ("relaunch", r)):
+            if stats["watchdog_breaches"]:
+                failures.append(
+                    f"{kind}: {stats['watchdog_breaches']} watchdog "
+                    f"breach(es) in the {phase} phase "
+                    f"(max step {stats['max_step_s']:.1f}s)")
+        if r["tier_demotions"]:
+            failures.append(f"{kind}: relaunch demoted tiers — the "
+                            "cache/denylist did not absorb the fault")
+    for f in failures:
+        print(f"SMOKE FAIL: {f}", file=sys.stderr)
+    print(f"chaos smoke: {'FAIL' if failures else 'OK'}",
+          file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> list:
+    smoke()
+    return []
+
+
+if __name__ == "__main__":
+    sys.exit(smoke())

@@ -46,12 +46,15 @@ def main(argv=None) -> None:
                          "planner's pricing floor (bench_planner), and "
                          "the planner-serve lane — planned decode/"
                          "prefill pricing vs hand-wired paged + warm "
-                         "plan replay (bench_planner_serve); "
+                         "plan replay (bench_planner_serve), and the "
+                         "chaos lane — one injected fault per class, "
+                         "tokens bit-identical to the fault-free run, "
+                         "no watchdog breach (bench_chaos); "
                          "writes no JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import (bench_mesh_tuning, bench_planner,
+        from . import (bench_chaos, bench_mesh_tuning, bench_planner,
                        bench_planner_serve, bench_serving,
                        bench_tuning_time)
         with isolated_schedule_cache():
@@ -60,6 +63,7 @@ def main(argv=None) -> None:
             rc = bench_serving.smoke() or rc
             rc = bench_planner.smoke() or rc
             rc = bench_planner_serve.smoke() or rc
+            rc = bench_chaos.smoke() or rc
         sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,

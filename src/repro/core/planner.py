@@ -466,7 +466,18 @@ def plan_model(cfg, batch: int, seq: int, *, stitch: bool = True,
     Serving phases take ``kv_len`` (the cache extent the attention
     core reads — defaults to ``seq``) and, for paged serving,
     ``paged`` = the KV page size; both join the plan fingerprint.
-    ``"forward"`` plans are cache-free and ignore/normalize both."""
+    ``"forward"`` plans are cache-free and ignore/normalize both.
+
+    Robustness (docs/reliability.md): an unreadable record is
+    quarantined to ``*.corrupt`` by ``load_plan``; a record that
+    parses but whose payload is mangled is quarantined here the same
+    way, then re-carved once — a relaunch must not re-parse known-bad
+    bytes forever.  A *stale* ``PLANNER_VERSION`` is neither: the
+    record stays in place and a fresh plan is carved beside it.
+    Dispatch-level quarantine (the circuit breaker denylisting a plan
+    fingerprint after a kernel failure) is consulted by the callers —
+    ``models/lm.py`` and ``serving/engine.py`` — not here: a
+    denylisted plan still loads; it just never runs."""
     if not plannable(cfg):
         raise ValueError(f"config {cfg.name!r} is not plannable")
     if phase not in PHASES:
@@ -486,7 +497,11 @@ def plan_model(cfg, batch: int, seq: int, *, stitch: bool = True,
             try:
                 plan = plan_from_json(rec)
             except (KeyError, ValueError, TypeError):
-                plan = None   # stale/corrupt record: re-plan
+                # parsed as JSON but the payload is mangled:
+                # quarantine the evidence and re-carve once
+                schedule_cache._quarantine_corrupt(
+                    schedule_cache.plan_entry_path(key, hw))
+                plan = None
             if plan is not None and plan.version == PLANNER_VERSION:
                 _PLAN_MEMO[key] = plan
                 return plan

@@ -21,7 +21,23 @@ Invalidation is structural: the key hash folds in ``SCHEMA_VERSION``
 analytical model's semantics), and the hardware spec's constants, so
 bumping any of them orphans old entries rather than misreading them.
 Corrupt or truncated files are treated as misses (the tuner simply
-runs).  Set ``REPRO_SCHEDULE_CACHE=0`` to disable persistence entirely.
+runs) and are **quarantined** to ``<entry>.json.corrupt`` — evidence
+preserved for debugging, while the retune writes a fresh entry at the
+original path.  A schema-version mismatch is *not* corruption (it is a
+valid record from an older layout) and is left in place.  Set
+``REPRO_SCHEDULE_CACHE=0`` to disable persistence entirely.
+
+Hardening (docs/reliability.md): writes are atomic (temp file +
+``os.replace``) and serialized per-entry with an advisory ``flock``
+where the platform provides one, so concurrent writers — a fleet of
+replicas sharing one REPRO_CACHE_DIR — can race ``store_*`` on the
+same key and readers still only ever see a complete record.  The
+store also holds **denylist records** (``deny-<hash>.json``,
+:func:`quarantine` / :func:`is_quarantined`): the circuit breaker in
+:mod:`repro.reliability.breaker` persists a failing schedule/plan
+fingerprint there, *distinct from deletion* — the cached entry stays
+warm, dispatch-level checks skip it, and a relaunch neither retries
+the broken unit nor re-tunes it in a storm.
 
 Entries also carry a **trial kind** — ``"analytic"`` (the search was
 ranked and measured by the model alone, this container's default) or
@@ -34,6 +50,7 @@ entries must not masquerade as it (ROADMAP follow-up from PR 3).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -41,7 +58,12 @@ import re
 import tempfile
 from hashlib import sha256
 from pathlib import Path
-from typing import Optional
+from typing import Iterator, Optional
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: locking is advisory
+    fcntl = None
 
 from .perf_model import MODEL_VERSION, TpuSpec
 from .tiling import Loop, Scope
@@ -56,6 +78,8 @@ TRIAL_KINDS = ("analytic", "measured")
 _ENV_DIR = "REPRO_CACHE_DIR"
 _ENV_ENABLE = "REPRO_SCHEDULE_CACHE"
 _ENTRY_NAME = re.compile(r"[0-9a-f]{32}\.json")
+_DENY_NAME = re.compile(r"deny-[0-9a-f]{32}\.json")
+CORRUPT_SUFFIX = ".corrupt"
 
 
 def enabled() -> bool:
@@ -92,6 +116,90 @@ def expr_from_json(data: list) -> Scope:
 
 
 # ---------------------------------------------------------------------------
+# Hardened read/write plumbing
+# ---------------------------------------------------------------------------
+
+def _quarantine_corrupt(path: Path) -> Optional[Path]:
+    """Move a corrupt entry aside to ``<name>.corrupt`` (evidence
+    preserved; the path frees up for the retuned replacement)."""
+    dst = path.with_name(path.name + CORRUPT_SUFFIX)
+    try:
+        os.replace(path, dst)
+        return dst
+    except OSError:
+        return None
+
+
+def _read_record(path: Path, fault_kind: str) -> Optional[dict]:
+    """Parse one record; None on miss.  Unparseable JSON — or a
+    deterministically injected read fault (``fault_kind``) standing in
+    for torn/bit-rotted storage — quarantines the file and misses."""
+    from ..reliability import faults as _faults
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError:
+        return None
+    try:
+        if _faults.check(fault_kind, path=str(path)):
+            raise ValueError(f"injected {fault_kind}")
+        rec = json.loads(text)
+        if not isinstance(rec, dict):
+            raise ValueError("record is not a JSON object")
+        return rec
+    except ValueError:
+        _quarantine_corrupt(path)
+        return None
+
+
+@contextlib.contextmanager
+def _entry_lock(path: Path) -> Iterator[None]:
+    """Advisory per-entry writer lock (``<name>.lock`` + flock).
+
+    Serializes racing writers of the same key so tempfile churn stays
+    bounded; correctness never depends on it — ``os.replace`` already
+    keeps readers atomic — so it is best-effort and a no-op where
+    flock is unavailable.
+    """
+    if fcntl is None:
+        yield
+        return
+    lock_path = path.with_name(path.name + ".lock")
+    try:
+        f = open(lock_path, "a+")
+    except OSError:
+        yield
+        return
+    try:
+        fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+    finally:
+        f.close()
+
+
+def _atomic_write(path: Path, rec: dict) -> Optional[Path]:
+    """Atomic temp-file + rename write under the advisory entry lock;
+    best-effort (a read-only filesystem must not break tuning)."""
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with _entry_lock(path):
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w", encoding="utf-8") as f:
+                    json.dump(rec, f)
+                os.replace(tmp, path)  # atomic: concurrent readers
+            finally:                   # never see a half-written entry
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        return path
+    except OSError:
+        return None
+
+
+# ---------------------------------------------------------------------------
 # Load / store
 # ---------------------------------------------------------------------------
 
@@ -116,15 +224,16 @@ def load(key: tuple, hw: TpuSpec,
     if not enabled():
         return None
     path = entry_path(key, hw, trial)
+    rec = _read_record(path, "cache_corrupt")
+    if rec is None:
+        return None
+    if rec.get("schema") != SCHEMA_VERSION:
+        return None  # stale layout, not corruption: leave it in place
+    if rec.get("key") != _jsonable_key(key):
+        return None  # hash collision paranoia
+    if rec.get("trial") != trial:
+        return None  # kind mismatch paranoia (path already splits)
     try:
-        with open(path, encoding="utf-8") as f:
-            rec = json.load(f)
-        if rec["schema"] != SCHEMA_VERSION:
-            return None
-        if rec["key"] != _jsonable_key(key):
-            return None  # hash collision paranoia
-        if rec["trial"] != trial:
-            return None  # kind mismatch paranoia (path already splits)
         return {
             "expr": expr_from_json(rec["expr"]),
             "tile_sizes": {str(k): int(v)
@@ -137,10 +246,10 @@ def load(key: tuple, hw: TpuSpec,
             "history": [(int(i), float(t)) for i, t in rec["history"]],
             "params": dict(rec["params"]),
         }
-    except FileNotFoundError:
+    except (ValueError, KeyError, TypeError, AttributeError):
+        # parsed as JSON but the payload is mangled: quarantine too
+        _quarantine_corrupt(path)
         return None
-    except (OSError, ValueError, KeyError, TypeError, AttributeError):
-        return None  # corrupt / truncated / foreign file: treat as miss
 
 
 def _jsonable_key(key: tuple) -> list:
@@ -173,20 +282,7 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
         "history": [[int(i), float(t)] for i, t in history],
         "params": params,
     }
-    path = entry_path(key, hw, trial)
-    try:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w", encoding="utf-8") as f:
-                json.dump(rec, f)
-            os.replace(tmp, path)  # atomic: concurrent readers never
-        finally:                   # see a half-written entry
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-        return path
-    except OSError:
-        return None
+    return _atomic_write(entry_path(key, hw, trial), rec)
 
 
 # ---------------------------------------------------------------------------
@@ -221,20 +317,20 @@ def load_plan(key: tuple, hw: TpuSpec) -> Optional[dict]:
     if not enabled():
         return None
     path = plan_entry_path(key, hw)
-    try:
-        with open(path, encoding="utf-8") as f:
-            rec = json.load(f)
-        if rec["schema"] != SCHEMA_VERSION:
-            return None
-        if rec["kind"] != "plan":
-            return None
-        if rec["key"] != _jsonable_key(key):
-            return None  # hash collision paranoia
-        return dict(rec["plan"])
-    except FileNotFoundError:
+    rec = _read_record(path, "plan_load")
+    if rec is None:
         return None
-    except (OSError, ValueError, KeyError, TypeError, AttributeError):
-        return None  # corrupt / truncated / foreign file: treat as miss
+    if rec.get("schema") != SCHEMA_VERSION:
+        return None  # stale layout, not corruption: leave it in place
+    if rec.get("kind") != "plan":
+        return None
+    if rec.get("key") != _jsonable_key(key):
+        return None  # hash collision paranoia
+    try:
+        return dict(rec["plan"])
+    except (ValueError, KeyError, TypeError):
+        _quarantine_corrupt(path)
+        return None
 
 
 def store_plan(key: tuple, hw: TpuSpec, plan: dict) -> Optional[Path]:
@@ -248,38 +344,118 @@ def store_plan(key: tuple, hw: TpuSpec, plan: dict) -> Optional[Path]:
         "key": _jsonable_key(key),
         "plan": plan,
     }
-    path = plan_entry_path(key, hw)
+    return _atomic_write(plan_entry_path(key, hw), rec)
+
+
+# ---------------------------------------------------------------------------
+# Denylist records (circuit-breaker quarantine; reliability/breaker.py)
+# ---------------------------------------------------------------------------
+#
+# A denylist record marks a *fingerprint* (schedule key or plan key) as
+# quarantined after a dispatch/compile failure.  It deliberately does
+# NOT remove the cached entry: deletion would make every relaunch miss,
+# re-tune, re-fail and re-tune again.  The record is consulted at
+# dispatch level (kernels/ops.py, models/lm.py, serving/engine.py), so
+# loads stay warm and the degraded twin is chosen without a search.
+
+def deny_path(key: tuple, hw: TpuSpec) -> Path:
+    blob = json.dumps([list(key), model_fingerprint(hw), "deny"],
+                      sort_keys=True, default=str)
+    name = "deny-" + sha256(blob.encode()).hexdigest()[:32] + ".json"
+    return cache_dir() / name
+
+
+def quarantine(key: tuple, hw: TpuSpec,
+               reason: str = "") -> Optional[Path]:
+    """Persist a denylist record for ``key``; best-effort."""
+    if not enabled():
+        return None
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "model_fingerprint": model_fingerprint(hw),
+        "kind": "deny",
+        "key": _jsonable_key(key),
+        "reason": str(reason),
+    }
+    return _atomic_write(deny_path(key, hw), rec)
+
+
+def is_quarantined(key: tuple, hw: TpuSpec) -> Optional[dict]:
+    """The denylist record for ``key``, or None when not quarantined.
+
+    An unreadable denylist record still counts as quarantined (fail
+    closed: the degraded path is always correct, retrying a known-bad
+    kernel is not).
+    """
+    if not enabled():
+        return None
+    path = deny_path(key, hw)
     try:
-        path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w", encoding="utf-8") as f:
-                json.dump(rec, f)
-            os.replace(tmp, path)  # atomic, as in store()
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-        return path
+        with open(path, encoding="utf-8") as f:
+            rec = json.load(f)
+        if rec.get("kind") != "deny":
+            return None
+        return rec
     except OSError:
         return None
+    except ValueError:
+        return {"kind": "deny", "reason": "unreadable denylist record"}
+
+
+def clear_quarantine(key: tuple, hw: TpuSpec) -> bool:
+    """Lift the quarantine for ``key`` (operator override)."""
+    try:
+        deny_path(key, hw).unlink()
+        return True
+    except OSError:
+        return False
+
+
+def list_quarantined() -> list[dict]:
+    """All readable denylist records in the cache dir."""
+    out = []
+    d = cache_dir()
+    if d.is_dir():
+        for p in sorted(d.glob("deny-*.json")):
+            if not _DENY_NAME.fullmatch(p.name):
+                continue
+            try:
+                with open(p, encoding="utf-8") as f:
+                    out.append(json.load(f))
+            except (OSError, ValueError):
+                pass
+    return out
 
 
 def clear() -> int:
     """Delete every cache entry; returns the number removed.
 
-    Only files matching this module's ``<32-hex>.json`` naming are
-    touched — REPRO_CACHE_DIR may legitimately point at a shared
+    Only files matching this module's naming — ``<32-hex>.json``
+    entries, their ``deny-*`` / ``*.corrupt`` / ``*.lock`` companions —
+    are touched: REPRO_CACHE_DIR may legitimately point at a shared
     scratch dir holding other tools' JSON artifacts.
     """
     n = 0
     d = cache_dir()
-    if d.is_dir():
-        for p in d.glob("*.json"):
-            if not _ENTRY_NAME.fullmatch(p.name):
+    if not d.is_dir():
+        return n
+    for p in d.glob("*.json"):
+        if not (_ENTRY_NAME.fullmatch(p.name)
+                or _DENY_NAME.fullmatch(p.name)):
+            continue
+        try:
+            p.unlink()
+            n += 1
+        except OSError:
+            pass
+    for pattern in ("*.json" + CORRUPT_SUFFIX, "*.json.lock"):
+        for p in d.glob(pattern):
+            base = p.name.split(".json", 1)[0] + ".json"
+            if not (_ENTRY_NAME.fullmatch(base)
+                    or _DENY_NAME.fullmatch(base)):
                 continue
             try:
                 p.unlink()
-                n += 1
             except OSError:
                 pass
     return n

@@ -41,6 +41,30 @@ def _backend_mode(mode: str) -> str:
     return "kernel" if jax.default_backend() == "tpu" else "ref"
 
 
+def _guarded(fingerprint: tuple, kernel_fn, ref_fn):
+    """Tiered dispatch for a fused-kernel tail (docs/reliability.md).
+
+    The breaker-open check routes a quarantined fingerprint straight to
+    the XLA reference twin without retrying it; otherwise the fused
+    path runs behind the ``kernel_dispatch`` fault point, and any
+    compile/dispatch failure records the fingerprint (persisting a
+    denylist record next to the cached schedule) before degrading to
+    the twin.  The twin computes the same values — tolerances aside,
+    a degraded call is indistinguishable to the caller.
+    """
+    from ..reliability import breaker as _breaker
+    from ..reliability import faults as _faults
+    if _breaker.is_open(fingerprint):
+        return ref_fn()
+    try:
+        _faults.fault_point("kernel_dispatch", op=str(fingerprint[0]))
+        return kernel_fn()
+    except Exception as e:  # noqa: BLE001 - degrade on any dispatch error
+        _breaker.record_failure(fingerprint,
+                                reason=f"{type(e).__name__}: {e}")
+        return ref_fn()
+
+
 def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
                mode: str = "auto", tuned: bool = True,
                interpret: Optional[bool] = None,
@@ -78,11 +102,16 @@ def gemm_chain(a: jax.Array, b: jax.Array, d: jax.Array,
 
     if m == "ref":
         return ref.gemm_chain_ref(a, b, d)
-    if tuned:
-        tk = api.fuse_gemm_chain(M, N, K, H, batch=bsz,
-                                 dtype=str(a.dtype), interpret=interp)
-        return tk(a, b, d)
-    return _gemm_kernel(a, b, d, interpret=interp)
+
+    def _kernel():
+        if tuned:
+            tk = api.fuse_gemm_chain(M, N, K, H, batch=bsz,
+                                     dtype=str(a.dtype), interpret=interp)
+            return tk(a, b, d)
+        return _gemm_kernel(a, b, d, interpret=interp)
+
+    return _guarded(("gemm", M, N, K, H, bsz, str(a.dtype)),
+                    _kernel, lambda: ref.gemm_chain_ref(a, b, d))
 
 
 def mlp_chain(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
@@ -107,7 +136,8 @@ def mlp_chain(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
     """
     m = _backend_mode(mode)
     gated = w_gate is not None
-    if m == "ref":
+
+    def _ref():
         h = x if prologue is None else prologue(x)
         if gated:
             hid = _ACTS[act](h @ w_gate) * (h @ w_up)
@@ -115,19 +145,28 @@ def mlp_chain(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
             hid = _ACTS[act](h @ w_up)
         e = hid @ w_down
         return e if epilogue is None else epilogue(e)
+
+    if m == "ref":
+        return _ref()
     M, K = x.shape
     N, H = w_up.shape[-1], w_down.shape[-1]
     interp = (m == "interpret") if interpret is None else interpret
-    kw = {}
-    if tuned:
-        tk = api.fuse_mlp_chain(M, N, H, batch=1, dtype=str(x.dtype),
-                                gated=gated, act=act, interpret=interp)
-        kw = tk.params.as_kwargs()
-    out = _mlp_chain_kernel(
-        x[None], w_up[None], w_down[None],
-        wg=w_gate[None] if gated else None, act=act,
-        prologue=prologue, epilogue=epilogue, interpret=interp, **kw)
-    return out[0]
+
+    def _kernel():
+        kw = {}
+        if tuned:
+            tk = api.fuse_mlp_chain(M, N, H, batch=1, dtype=str(x.dtype),
+                                    gated=gated, act=act,
+                                    interpret=interp)
+            kw = tk.params.as_kwargs()
+        out = _mlp_chain_kernel(
+            x[None], w_up[None], w_down[None],
+            wg=w_gate[None] if gated else None, act=act,
+            prologue=prologue, epilogue=epilogue, interpret=interp, **kw)
+        return out[0]
+
+    return _guarded(("mlp", M, N, H, str(x.dtype), gated, act),
+                    _kernel, _ref)
 
 
 def _gemm_body(M, N, K, H, batch, dtype, m, tuned, interp,
@@ -206,14 +245,22 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if m == "ref":
         return ref.gqa_attention_ref(q, k, v, causal=causal,
                                      window=window, scale=scale)
-    if tuned:
-        tk = api.fuse_attention(M, N, D, Dv, heads=hq, batch=b,
-                                dtype=str(q.dtype), causal=causal,
-                                window=window, scale=scale,
-                                interpret=interp)
-        return tk(q, k, v)
-    return _attn_kernel(q, k, v, causal=causal, window=window,
-                        scale=scale, interpret=interp)
+
+    def _kernel():
+        if tuned:
+            tk = api.fuse_attention(M, N, D, Dv, heads=hq, batch=b,
+                                    dtype=str(q.dtype), causal=causal,
+                                    window=window, scale=scale,
+                                    interpret=interp)
+            return tk(q, k, v)
+        return _attn_kernel(q, k, v, causal=causal, window=window,
+                            scale=scale, interpret=interp)
+
+    return _guarded(
+        ("attn", M, N, D, Dv, hq, b, str(q.dtype), causal, window),
+        _kernel,
+        lambda: ref.gqa_attention_ref(q, k, v, causal=causal,
+                                      window=window, scale=scale))
 
 
 def attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh, *,

@@ -577,13 +577,26 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
         # decode only: the kernel's tail convention needs q rows at
         # lengths-M..lengths-1, which padded prefill rows violate.
         # ``block`` carries the regime search's winning tiles, so the
-        # executed schedule is the one the model priced.
-        from ..kernels.attention import fused_attention_paged
+        # executed schedule is the one the model priced.  Dispatch is
+        # guarded: a quarantined or failing fused paged kernel degrades
+        # to the bit-identical XLA gather twin below
+        # (docs/reliability.md).
+        from ..reliability import breaker as _breaker
+        from ..reliability import faults as _faults
         bq, bkv = block if block is not None else (128, 128)
-        return fused_attention_paged(qt, cache["k_pages"],
-                                     cache["v_pages"], page_table,
-                                     positions[:, -1] + 1, bq=bq,
-                                     bkv=bkv, window=win, scale=scale)
+        fp = ("attn-paged", b, qt.shape[1], ps, mp, win, bq, bkv,
+              str(qt.dtype))
+        if not _breaker.is_open(fp):
+            try:
+                _faults.fault_point("kernel_dispatch", op="attn-paged")
+                from ..kernels.attention import fused_attention_paged
+                return fused_attention_paged(
+                    qt, cache["k_pages"], cache["v_pages"], page_table,
+                    positions[:, -1] + 1, bq=bq, bkv=bkv, window=win,
+                    scale=scale)
+            except Exception as e:  # noqa: BLE001 - degrade to twin
+                _breaker.record_failure(
+                    fp, reason=f"{type(e).__name__}: {e}")
     kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
                     group, axis=1)
     vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),

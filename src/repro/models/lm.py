@@ -239,22 +239,35 @@ class LM:
         if (rt.planner and kind == "attn"
                 and ((cache is None and page_table is None) or paged)):
             from ..core import planner as planner_mod
+            from ..reliability import breaker as _breaker
             if planner_mod.plannable(cfg):
                 b_, s_ = int(x.shape[0]), int(x.shape[1])
                 if paged:
                     ps_ = int(cache["k_pages"].shape[2])
-                    plan = planner_mod.plan_model(
-                        cfg, b_, s_, stitch=rt.stitch,
+                    plan_kw = dict(
                         phase="prefill" if s_ > 1 else "decode",
                         paged=ps_,
                         kv_len=int(page_table.shape[1]) * ps_)
                 else:
-                    plan = planner_mod.plan_model(cfg, b_, s_,
-                                                  stitch=rt.stitch)
-                return L.run_planned_layer(
-                    plan.layer, p, x, cfg, rt.rules,
-                    positions=positions, rt=rt, cache=cache,
-                    page_table=page_table)
+                    plan_kw = dict()
+                pkey = planner_mod.plan_key(cfg, b_, s_, rt.stitch,
+                                            **plan_kw)
+                # A quarantined plan fingerprint (circuit breaker,
+                # docs/reliability.md) degrades to the hand-wired twin
+                # below — bit-identical with stitching off — instead
+                # of retrying the broken planned dispatch.
+                if not _breaker.is_open(pkey):
+                    try:
+                        plan = planner_mod.plan_model(
+                            cfg, b_, s_, stitch=rt.stitch, **plan_kw)
+                        return L.run_planned_layer(
+                            plan.layer, p, x, cfg, rt.rules,
+                            positions=positions, rt=rt, cache=cache,
+                            page_table=page_table)
+                    except Exception as e:  # noqa: BLE001 - degrade
+                        _breaker.record_failure(
+                            pkey,
+                            reason=f"{type(e).__name__}: {e}")
         h = L.apply_norm(p["ln1"], x, cfg)
         if kind == "attn":
             win = cfg.window

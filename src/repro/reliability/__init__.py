@@ -1,0 +1,27 @@
+"""Fault injection and graceful degradation for the served stack.
+
+Three pieces (docs/reliability.md):
+
+* :mod:`repro.reliability.faults` — seeded, deterministic fault
+  injection threaded through the production seams (kernel dispatch,
+  schedule/plan load, page allocation, the engine step loop).
+* :mod:`repro.reliability.breaker` — per-fingerprint circuit breaker
+  that quarantines failing schedules/plans via persistent denylist
+  records (distinct from deletion; no retuning storms on relaunch).
+* :mod:`repro.reliability.watchdog` — soft step-latency watchdog for
+  the serving loop.
+
+:mod:`repro.reliability.chaos` (imported explicitly, not re-exported
+here — it pulls in the serving engine) is the shared chaos harness
+used by ``tests/test_reliability.py`` and ``benchmarks/bench_chaos.py``.
+"""
+from .breaker import BREAKER, CircuitBreaker            # noqa: F401
+from .faults import (FAULT_KINDS, FaultSpec, InjectedFault,  # noqa: F401
+                     active, check, clear, fault_point, inject, injected)
+from .watchdog import StepWatchdog                      # noqa: F401
+
+__all__ = [
+    "FAULT_KINDS", "FaultSpec", "InjectedFault",
+    "inject", "injected", "clear", "active", "check", "fault_point",
+    "CircuitBreaker", "BREAKER", "StepWatchdog",
+]

@@ -15,6 +15,12 @@ kernel), ``models/layers.py::paged_attention_block`` (the XLA twin the
 CPU engine runs), and ``dist/ring_dispatch.py::
 paged_ring_decode_attention`` (the kv-sharded regime) — priced against
 each other by ``core.api.fuse_attention_paged_regimes``.
+
+Degradation under faults — the tiered fallback chain (``TIERS``),
+per-request outcomes (``OUTCOMES``), deadlines, retry budgets and
+``drain()`` — is documented in docs/reliability.md and exercised by
+``repro.reliability.chaos``.
 """
-from .engine import FinishedRequest, ServingEngine  # noqa: F401
+from .engine import (FinishedRequest, OUTCOMES, ServingEngine,  # noqa: F401
+                     TIERS)
 from .kv_pages import PagePool, RequestPages  # noqa: F401

@@ -27,19 +27,41 @@ everywhere else in this repo: at construction the engine prices
 paged-spatial vs paged-ring for its decode shape
 (``kernels.ops.paged_attention_regime_choice``, persistent-cached) and
 enables the kv-sharded ring path only when the model ranks it fastest.
+
+Degradation (docs/reliability.md): the engine never dies on a bad
+fused unit.  Execution runs through a **tiered fallback chain** —
+tier 0 is the configured model (planner/kernel paths as built), tier 1
+its XLA twin (planner, kernel_ops and the ring decode disabled),
+tier 2 the same twin executed eagerly (no jit) — demoting stickily on
+a dispatch failure and quarantining the failing plan fingerprint
+through the circuit breaker so relaunches skip it.  Requests carry an
+optional per-request **deadline** (evicted honestly past it), a
+preemption **retry budget** bounds recompute livelock, a soft
+**watchdog** times every step, and ``drain()`` replaces the
+``reset()``-while-in-flight error with a graceful stop.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..reliability import breaker as _breaker
+from ..reliability import faults as _faults
+from ..reliability.watchdog import StepWatchdog
 from . import kv_pages as KP
+
+#: Execution tiers, best first (docs/reliability.md §3).
+TIERS = ("configured", "xla-twin", "eager-twin")
+
+#: Per-request outcomes reported on ``FinishedRequest.outcome``.
+OUTCOMES = ("complete", "deadline", "preempt_budget", "drained")
 
 
 @dataclasses.dataclass
@@ -52,6 +74,8 @@ class FinishedRequest:
     submit_step: int             # budget when eos_id fired)
     finish_step: int
     n_preempted: int = 0
+    outcome: str = "complete"    # one of OUTCOMES; anything but
+    #                              "complete" means tokens is partial
 
 
 @dataclasses.dataclass
@@ -63,6 +87,7 @@ class _Pending:
     max_new: int
     submit_step: int
     n_preempted: int = 0
+    deadline: Optional[int] = None   # absolute step number, inclusive
 
 
 @dataclasses.dataclass
@@ -78,6 +103,7 @@ class _Slot:
     n_preempted: int = 0
     n_done_admit: int = 0        # generated tokens already inside
     #                              ``prompt`` (recompute re-prefilled them)
+    deadline: Optional[int] = None
 
     @property
     def pos(self) -> int:
@@ -112,7 +138,10 @@ class ServingEngine:
                  page_size: int = 16, n_pages: int = 64,
                  max_pages_per_seq: int = 8,
                  eos_id: Optional[int] = None,
-                 choose_regime: bool = True, verbose: bool = False):
+                 choose_regime: bool = True, verbose: bool = False,
+                 max_preemptions: int = 8,
+                 watchdog_s: Optional[float] = None,
+                 stall_limit: int = 8):
         self.params = params
         self.max_batch = max_batch
         self.page_size = page_size
@@ -120,6 +149,9 @@ class ServingEngine:
         self.n_ctx = max_pages_per_seq * page_size
         self.eos_id = eos_id
         self.verbose = verbose
+        self.max_preemptions = max_preemptions
+        self.stall_limit = stall_limit
+        self.watchdog = StepWatchdog(budget_s=watchdog_s)
         self.pool = KP.PagePool(n_pages, page_size)
         self.queue: list[_Pending] = []
         self.slots: list[Optional[_Slot]] = [None] * max_batch
@@ -127,9 +159,15 @@ class ServingEngine:
         self.step_no = 0
         self._next_rid = 0
         self._admit_seq = 0
+        self._stall = 0              # consecutive barren steps
+        self._draining = False
+        self.exec_tier = 0           # index into TIERS; sticky demotion
         self.stats = {"decode_steps": 0, "prefills": 0, "preemptions": 0,
                       "generated": 0, "slot_steps": 0, "active_steps": 0,
-                      "ctx_tokens": 0, "page_slot_steps": 0}
+                      "ctx_tokens": 0, "page_slot_steps": 0,
+                      "admit_requeues": 0, "tier_demotions": 0,
+                      "deadline_evictions": 0, "preempt_failures": 0,
+                      "drained": 0}
         self.regime, self.regime_source, self.regime_times, tiles = \
             self._choose_regime(model) if choose_regime else \
             ("paged-spatial", None, {}, None)
@@ -148,21 +186,98 @@ class ServingEngine:
                 paged_block=tiles))
         self.model = model
         self.cache = model.init_paged_cache(n_pages, page_size)
-        self._decode = jax.jit(model.decode_step_paged)
-        self._prefill = jax.jit(model.prefill_paged)
+        self._build_exec()
         if model.rt.planner:
             # Pre-plan the steady-state decode DAG at construction so
             # the first serving step never pays the carve: every later
             # decode_step_paged hits the plan memo (and relaunches
             # replay the ("plan", …, phase, paged) disk record —
             # core/schedule_cache.py).  Prefill shapes vary per prompt
-            # and are planned (then memoized) on first sight.
+            # and are planned (then memoized) on first sight.  A
+            # quarantined decode plan (circuit breaker) is skipped —
+            # the layer-level dispatch degrades to the hand-wired twin
+            # instead of re-carving a denylisted fingerprint.
             from ..core import planner as planner_mod
             if planner_mod.plannable(model.cfg):
-                planner_mod.plan_model(
-                    model.cfg, self.max_batch, 1,
-                    stitch=model.rt.stitch, phase="decode",
+                dkey = planner_mod.plan_key(
+                    model.cfg, self.max_batch, 1, model.rt.stitch,
+                    phase="decode", paged=self.page_size,
+                    kv_len=self.n_ctx)
+                if not _breaker.is_open(dkey):
+                    planner_mod.plan_model(
+                        model.cfg, self.max_batch, 1,
+                        stitch=model.rt.stitch, phase="decode",
+                        paged=self.page_size, kv_len=self.n_ctx)
+
+    # ------------------------------------------------------------------
+    # Tiered execution (fused/planned -> XLA twin -> eager twin)
+    # ------------------------------------------------------------------
+    def _tier_model(self, tier: int):
+        """The model executing at ``tier``.  Tiers 1–2 strip every
+        fused/planned/collective decode feature; what remains is the
+        plain XLA paged path, bit-identical to tier 0 on f32 configs
+        with stitching off (tests/test_serving.py pins that twin
+        equality)."""
+        if tier == 0:
+            return self.model
+        rt = self.model.rt
+        twin_rt = dataclasses.replace(rt, planner=False,
+                                      kernel_ops=False,
+                                      dist_decode_attn=False)
+        return type(self.model)(self.model.cfg, twin_rt)
+
+    def _build_exec(self) -> None:
+        m = self._tier_model(self.exec_tier)
+        if self.exec_tier < len(TIERS) - 1:
+            self._decode = jax.jit(m.decode_step_paged)
+            self._prefill = jax.jit(m.prefill_paged)
+        else:
+            # last resort runs eagerly: no jit pipeline to fail
+            self._decode = m.decode_step_paged
+            self._prefill = m.prefill_paged
+
+    def _note_tier_failure(self, phase: str, err: Exception) -> None:
+        """Quarantine what tier 0 was executing before demoting, so a
+        relaunch starts on the degraded path instead of re-failing."""
+        if self.exec_tier == 0 and self.model.rt.planner:
+            from ..core import planner as planner_mod
+            if planner_mod.plannable(self.model.cfg):
+                dkey = planner_mod.plan_key(
+                    self.model.cfg, self.max_batch, 1,
+                    self.model.rt.stitch, phase="decode",
                     paged=self.page_size, kv_len=self.n_ctx)
+                _breaker.record_failure(
+                    dkey, reason=f"engine {phase}: "
+                                 f"{type(err).__name__}: {err}")
+        if self.verbose:
+            print(f"serving tier demotion on {phase}: "
+                  f"{TIERS[self.exec_tier]} -> "
+                  f"{TIERS[self.exec_tier + 1]} ({err})")
+
+    def _exec(self, phase: str, *args):
+        """Run one prefill/decode dispatch through the fallback chain.
+
+        Inputs are pure (params, cache, host-built arrays), so a failed
+        dispatch is retried at the next tier with the SAME inputs —
+        degradation changes which program computes the step, never
+        which step is computed, which is what keeps chaos-run tokens
+        bit-identical (tests/test_reliability.py)."""
+        while True:
+            try:
+                if self.exec_tier == 0:
+                    _faults.fault_point("kernel_dispatch",
+                                        op=f"engine-{phase}")
+                _faults.fault_point("engine_step", op=phase,
+                                    tier=self.exec_tier)
+                fn = self._decode if phase == "decode" else self._prefill
+                return fn(*args)
+            except Exception as e:  # noqa: BLE001 - demote and retry
+                if self.exec_tier >= len(TIERS) - 1:
+                    raise
+                self._note_tier_failure(phase, e)
+                self.exec_tier += 1
+                self.stats["tier_demotions"] += 1
+                self._build_exec()
 
     # ------------------------------------------------------------------
     def _choose_regime(self, model):
@@ -201,17 +316,24 @@ class ServingEngine:
             (choice.kernel.params.bq, choice.kernel.params.bkv)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int,
+               deadline_steps: Optional[int] = None) -> int:
         """Queue one request; returns its id.  Validated against the
         engine's hard geometry so admission can never dead-lock — the
         pool must cover the WORST-CASE re-admission after a preemption
         (recompute prompt = prompt ++ up to ``max_new - 1`` generated
         tokens, plus the one-page admission headroom), not just the
-        request's total footprint."""
+        request's total footprint.
+
+        deadline_steps: SLO budget in scheduler steps; past it the
+        request is evicted with ``outcome="deadline"`` and whatever
+        tokens it produced — honest partial results, not a hang."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new < 1:
             raise ValueError("max_new must be >= 1: greedy serving "
                              "always emits the prefill's first token")
+        if deadline_steps is not None and deadline_steps < 1:
+            raise ValueError(f"bad deadline_steps {deadline_steps}")
         total = len(prompt) + max_new
         if total > self.n_ctx:
             raise ValueError(
@@ -224,8 +346,10 @@ class ServingEngine:
                 f"but the pool holds {self.pool.n_pages - 1}")
         rid = self._next_rid
         self._next_rid += 1
+        deadline = (self.step_no + deadline_steps
+                    if deadline_steps is not None else None)
         self.queue.append(_Pending(rid, prompt, len(prompt), [], max_new,
-                                   self.step_no))
+                                   self.step_no, deadline=deadline))
         return rid
 
     # ------------------------------------------------------------------
@@ -246,21 +370,26 @@ class ServingEngine:
         self.queue.pop(0)
         alloc = KP.RequestPages()
         if not alloc.ensure(plen + 1, self.pool):
-            raise RuntimeError("admission raced the free list")  # can't
-            # happen: n_free was checked above and step() is single-
-            # threaded, but allocation must never hide in an assert
+            # admission raced the free list (or an injected
+            # page-exhaustion fault): put the head back and let a
+            # later step retry instead of dying — nothing was
+            # allocated, so the engine state is untouched
+            self.queue.insert(0, pend)
+            self.stats["admit_requeues"] += 1
+            return False
         s_pad = math.ceil(plen / self.page_size) * self.page_size
         toks = np.zeros((1, s_pad), np.int32)
         toks[0, :plen] = pend.prompt
         table = jnp.asarray(KP.table_array([alloc], self.max_pages))
-        logits, self.cache = self._prefill(
-            self.params, jnp.asarray(toks), self.cache, table,
-            jnp.int32(plen))
+        logits, self.cache = self._exec(
+            "prefill", self.params, jnp.asarray(toks), self.cache,
+            table, jnp.int32(plen))
         tok = int(jnp.argmax(logits[0]))
         slot = _Slot(pend.rid, pend.prompt, pend.base_prompt_len,
                      pend.done + [tok], pend.max_new, alloc,
                      pend.submit_step, self._admit_seq,
-                     pend.n_preempted, n_done_admit=len(pend.done))
+                     pend.n_preempted, n_done_admit=len(pend.done),
+                     deadline=pend.deadline)
         self._admit_seq += 1
         self.slots[free[0]] = slot
         self.stats["prefills"] += 1
@@ -273,16 +402,37 @@ class ServingEngine:
         (greedy decode is deterministic, so the continuation picks up
         where it left off).  Only post-admission tokens are appended —
         after an earlier preemption ``prompt`` already ends with the
-        first ``n_done_admit`` generated tokens."""
+        first ``n_done_admit`` generated tokens.
+
+        Retry budget + backoff (docs/reliability.md §4): a request
+        preempted more than ``max_preemptions`` times finishes with
+        ``outcome="preempt_budget"`` and its partial tokens instead of
+        thrashing the pool forever; and while the first recompute
+        requeues at the head (FIFO fairness), repeat victims back off
+        to the tail so one pathological request cannot livelock
+        admission."""
         slot = self.slots[idx]
         slot.alloc.release(self.pool)
+        self.slots[idx] = None
+        if slot.n_preempted + 1 > self.max_preemptions:
+            self.finished.append(FinishedRequest(
+                slot.rid, slot.base_prompt_len, list(slot.generated),
+                slot.submit_step, self.step_no, slot.n_preempted + 1,
+                outcome="preempt_budget"))
+            self.stats["preempt_failures"] += 1
+            self.stats["generated"] += len(slot.generated)
+            return
         fresh = slot.generated[slot.n_done_admit:]
-        self.queue.insert(0, _Pending(
+        pend = _Pending(
             slot.rid,
             np.concatenate([slot.prompt, np.asarray(fresh, np.int32)]),
             slot.base_prompt_len, list(slot.generated), slot.max_new,
-            slot.submit_step, slot.n_preempted + 1))
-        self.slots[idx] = None
+            slot.submit_step, slot.n_preempted + 1,
+            deadline=slot.deadline)
+        if slot.n_preempted == 0:
+            self.queue.insert(0, pend)
+        else:
+            self.queue.append(pend)
         self.stats["preemptions"] += 1
 
     def _maybe_finish(self, idx: int) -> None:
@@ -312,11 +462,55 @@ class ServingEngine:
             victim = max(active, key=lambda i: self.slots[i].admit_seq)
             self._preempt(victim)
 
+    def _finish_request(self, rid, prompt_len, tokens, submit_step,
+                        n_preempted, outcome: str) -> None:
+        self.finished.append(FinishedRequest(
+            rid, prompt_len, list(tokens), submit_step, self.step_no,
+            n_preempted, outcome=outcome))
+        self.stats["generated"] += len(tokens)
+
+    def _evict_slot(self, idx: int, outcome: str) -> None:
+        """Honest eviction: pages back to the pool, partial tokens
+        reported under ``outcome``."""
+        slot = self.slots[idx]
+        slot.alloc.release(self.pool)
+        self.slots[idx] = None
+        self._finish_request(slot.rid, slot.base_prompt_len,
+                             slot.generated, slot.submit_step,
+                             slot.n_preempted, outcome)
+
+    def _expire_deadlines(self) -> None:
+        """SLO-aware eviction: queued or running requests past their
+        deadline finish NOW with ``outcome="deadline"`` and whatever
+        they have — freeing pages for requests that can still meet
+        theirs."""
+        kept = []
+        for pend in self.queue:
+            if pend.deadline is not None and self.step_no > pend.deadline:
+                self._finish_request(pend.rid, pend.base_prompt_len,
+                                     pend.done, pend.submit_step,
+                                     pend.n_preempted, "deadline")
+                self.stats["deadline_evictions"] += 1
+            else:
+                kept.append(pend)
+        self.queue[:] = kept
+        for i, slot in enumerate(self.slots):
+            if (slot is not None and slot.deadline is not None
+                    and self.step_no > slot.deadline):
+                self._evict_slot(i, "deadline")
+                self.stats["deadline_evictions"] += 1
+
     # ------------------------------------------------------------------
     def step(self) -> list[FinishedRequest]:
         """One scheduler iteration; returns requests finished in it."""
         n_done = len(self.finished)
         self.step_no += 1
+        with self.watchdog.watch(f"step{self.step_no}"):
+            self._step_inner()
+        return self.finished[n_done:]
+
+    def _step_inner(self) -> None:
+        self._expire_deadlines()
         # running slots take their growth pages BEFORE admission sees
         # the free count, and admission reserves each fresh request's
         # first decode slot — so the second growth pass below can only
@@ -324,16 +518,25 @@ class ServingEngine:
         # admitted this step
         self._grow_or_preempt()
         admitted = False
-        while self._admit_one():
-            admitted = True
+        if not self._draining:
+            while self._admit_one():
+                admitted = True
         active = self._grow_or_preempt()
         if not active:
-            if self.queue and not admitted:
-                raise RuntimeError(
-                    "scheduler stalled: pool cannot cover the queue "
-                    "head even when idle — shrink prompts or grow "
-                    "n_pages")
-            return self.finished[n_done:]
+            if self.queue and not admitted and not self._draining:
+                # barren step with work queued: count it, and only die
+                # after stall_limit in a row — a transient allocation
+                # failure (free-list race, injected exhaustion)
+                # recovers on a later step, a genuine geometry stall
+                # does not
+                self._stall += 1
+                if self._stall > self.stall_limit:
+                    raise RuntimeError(
+                        "scheduler stalled: pool cannot cover the "
+                        "queue head even when idle — shrink prompts "
+                        "or grow n_pages")
+            return
+        self._stall = 0
 
         tokens = np.zeros((self.max_batch,), np.int32)
         positions = np.full((self.max_batch,), -1, np.int32)
@@ -343,8 +546,8 @@ class ServingEngine:
         table = jnp.asarray(KP.table_array(
             [s.alloc if s is not None else None for s in self.slots],
             self.max_pages))
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
+        logits, self.cache = self._exec(
+            "decode", self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), table)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.stats["decode_steps"] += 1
@@ -356,19 +559,71 @@ class ServingEngine:
             self.stats["page_slot_steps"] += len(slot.alloc.pages)
             slot.generated.append(int(nxt[i]))
             self._maybe_finish(i)
+
+    # ------------------------------------------------------------------
+    def drain(self, deadline: Optional[float] = None,
+              max_steps: Optional[int] = None) -> list[FinishedRequest]:
+        """Graceful stop: admission closes, in-flight requests run to
+        completion, and whatever cannot finish inside ``deadline``
+        wall-seconds (or ``max_steps`` scheduler steps) is evicted with
+        ``outcome="drained"`` and its partial tokens.  Queued requests
+        that never reached a slot are failed immediately the same way
+        — honestly, not silently dropped.  Returns the requests that
+        finished (by any outcome) during the drain."""
+        n_done = len(self.finished)
+        self._draining = True
+        try:
+            def _fail_queue():
+                for pend in self.queue:
+                    self._finish_request(
+                        pend.rid, pend.base_prompt_len, pend.done,
+                        pend.submit_step, pend.n_preempted, "drained")
+                    self.stats["drained"] += 1
+                self.queue.clear()
+
+            _fail_queue()
+            t0 = time.perf_counter()
+            steps = 0
+            while any(s is not None for s in self.slots):
+                if deadline is not None \
+                        and time.perf_counter() - t0 >= deadline:
+                    break
+                if max_steps is not None and steps >= max_steps:
+                    break
+                self.step()
+                steps += 1
+                _fail_queue()   # preemption refugees drain too
+            for i, slot in enumerate(self.slots):
+                if slot is not None:
+                    self._evict_slot(i, "drained")
+                    self.stats["drained"] += 1
+        finally:
+            self._draining = False
         return self.finished[n_done:]
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
         """Zero the counters between ``run()`` calls (benchmarks warm
-        the compiled steps with a throwaway workload first).  Only
-        legal when idle — every page is back in the pool."""
+        the compiled steps with a throwaway workload first).
+
+        Calling it with requests in flight — formerly a hard
+        ``RuntimeError`` — now emits a ``DeprecationWarning`` and
+        drains immediately (``drain(deadline=0)``): in-flight work is
+        evicted honestly as ``outcome="drained"`` before the counters
+        zero."""
         if self.queue or any(s is not None for s in self.slots):
-            raise RuntimeError("reset() while requests are in flight")
+            warnings.warn(
+                "reset() with requests in flight is deprecated; "
+                "draining them first — call drain() explicitly to "
+                "control the deadline", DeprecationWarning,
+                stacklevel=2)
+            self.drain(deadline=0.0)
         assert self.pool.n_free == self.pool.n_pages - 1
         self.finished = []
         self.step_no = 0
         self._next_rid = 0
+        self._stall = 0
+        self.watchdog.reset()
         for k in self.stats:
             self.stats[k] = 0
 
@@ -390,4 +645,7 @@ class ServingEngine:
         stats["wall_s"] = dt
         stats["tok_per_s"] = stats["generated"] / dt if dt > 0 else 0.0
         stats["regime"] = self.regime
+        stats["exec_tier"] = TIERS[self.exec_tier]
+        stats["watchdog_breaches"] = self.watchdog.breaches
+        stats["max_step_s"] = self.watchdog.max_step_s
         return out, stats

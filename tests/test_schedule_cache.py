@@ -335,3 +335,85 @@ def test_plan_version_bump_invalidates(_planner):
                                 "decode", 16, 512) != kd
     finally:
         planner.PLANNER_VERSION -= 1
+
+
+# ---------------------------------------------------------------------------
+# Write hardening (atomic replace + advisory lock + quarantine)
+# ---------------------------------------------------------------------------
+
+def _store_kwargs(writer: int) -> dict:
+    return dict(expr=deep_tiling("mhnk"),
+                tile_sizes={"m": 128, "h": 64, "n": 128, "k": 64},
+                best_time=1e-3 * (writer + 1), n_measured=writer,
+                n_iterations=1, n_candidates=4, prune_stats={"rule1": 0},
+                history=[[0, 1e-3 * (writer + 1)]],
+                params={"writer": writer, "pad": "x" * (500 + writer)})
+
+
+def test_concurrent_store_same_key_stays_whole(tmp_path):
+    """Threads hammering store() on one key: the survivor is exactly
+    one complete record (temp-file + os.replace, advisory flock), never
+    a torn mix of two writers, and no temp files leak."""
+    import threading
+
+    key = ("gemm", 512, 512, 128, 128, 1, "float32")
+    n = 8
+    barrier = threading.Barrier(n)
+
+    def write(i):
+        barrier.wait()
+        for _ in range(10):
+            schedule_cache.store(key, V5E, **_store_kwargs(i))
+
+    threads = [threading.Thread(target=write, args=(i,))
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rec = schedule_cache.load(key, V5E)
+    assert rec is not None
+    w = rec["params"]["writer"]
+    assert rec["best_time"] == pytest.approx(1e-3 * (w + 1))
+    assert rec["n_measured"] == w
+    assert rec["params"]["pad"] == "x" * (500 + w)
+    assert len(list(tmp_path.glob("*.json"))) == 1
+    assert not list(tmp_path.glob("*.tmp"))
+    assert not list(tmp_path.glob("*.corrupt"))
+
+
+def test_corrupt_entry_quarantined_then_retuned(tmp_path):
+    """A mangled entry is renamed to *.corrupt (evidence preserved, not
+    deleted) and the next lookup retunes a fresh record at the original
+    path."""
+    api.fuse_gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    [entry] = tmp_path.glob("*.json")
+    garbage = '{"schema": ' + str(schedule_cache.SCHEMA_VERSION) + ", ]["
+    entry.write_text(garbage)
+
+    api.clear_cache()
+    tk = api.fuse_gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    assert tk.source == "search"            # miss forced a retune
+    evidence = entry.with_name(entry.name + schedule_cache.CORRUPT_SUFFIX)
+    assert evidence.read_text() == garbage  # forensics intact
+    assert entry.exists()                   # fresh record, same path
+
+    api.clear_cache()
+    warm = api.fuse_gemm_chain(512, 512, 128, 128, dtype="bfloat16")
+    assert warm.source == "disk"            # cache healthy again
+
+
+def test_clear_sweeps_quarantine_artifacts(tmp_path):
+    """clear() removes denylist records and *.corrupt / *.lock debris
+    alongside entries, still sparing foreign JSON."""
+    api.fuse_gemm_chain(512, 256, 64, 64, dtype="bfloat16")
+    schedule_cache.quarantine(("gemm", "k"), V5E, reason="test")
+    [entry] = (p for p in tmp_path.glob("*.json")
+               if not p.name.startswith("deny-"))
+    entry.with_name(entry.name + ".corrupt").write_text("{")
+    entry.with_name(entry.name + ".lock").write_text("")
+    foreign = tmp_path / "BENCH_other.json"
+    foreign.write_text("{}")
+
+    assert schedule_cache.clear() == 2      # entry + deny record
+    assert list(tmp_path.iterdir()) == [foreign]

@@ -39,8 +39,9 @@ _DOC_PATH = re.compile(r"\bdocs/[\w.\-/]+\.md\b")
 _BARE_CITE = re.compile(r"\b[A-Z][A-Z_]*\.md\b")
 _MODULE_CITE = re.compile(
     r"\b((?:src/)?(?:repro/)?"
-    r"(?:core|kernels|models|dist|launch|serving|configs|ckpt|runtime|"
-    r"optim|data|tests|tools|benchmarks|examples)/[\w./]*\.py)\b")
+    r"(?:core|kernels|models|dist|launch|serving|reliability|configs|"
+    r"ckpt|runtime|optim|data|tests|tools|benchmarks|examples)"
+    r"/[\w./]*\.py)\b")
 _ARTIFACT_CITE = re.compile(r"\bBENCH_\w+\.json\b")
 
 
