@@ -1,0 +1,176 @@
+"""Sentinel smoke lane: shadow verification is cheap and catches what
+the crash path cannot (repro.reliability.sentinels; docs/reliability.md
+"Sentinels").
+
+Wired into ``benchmarks/run.py --smoke`` as CI's silent-corruption
+gate.  Two lanes:
+
+* **overhead** — a long ragged serving workload (~100+ dispatches, so
+  the seeded sampler's realized check rate is actually ~1/64, not a
+  small-sample accident) runs on one engine with the sentinels
+  disarmed and one with shadow verification armed at the production
+  default rate; served tokens must be bit-identical and the armed
+  engine must keep >= 95% of the disarmed tokens/s
+  (best-of-``REPEATS``, jit-warmed — the shadow twin only ever runs
+  on the sampler's draw, so steady-state cost is a hash per dispatch
+  plus the sampled twin executions, and the realized checks/dispatches
+  ratio is printed so the lane cannot quietly oversample).
+* **wrong_answer** — the silent-corruption fault class armed at rate
+  1.0 through the three-phase chaos harness with the sentinels at rate
+  1.0: the corruption must be *detected* (golden probe or shadow
+  mismatch), the decode-plan fingerprint quarantined on disk, every
+  phase's tokens bit-identical to the fault-free baseline, and the
+  relaunch must replay clean at tier "configured" with zero demotions.
+
+Only the overhead lane measures anything; the rest are invariants, so
+the module runs in the smoke lane only (``main()`` just delegates).
+"""
+import contextlib
+import sys
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import planner, schedule_cache
+from repro.core.perf_model import V5E
+from repro.models.lm import LM
+from repro.reliability import breaker, chaos, sentinels
+from repro.serving.engine import ServingEngine
+
+#: Interleaved timed runs per arm: the lane compares each arm's
+#: *fastest* run (CPU contention on a shared CI box only ever adds
+#: time, so min-of-N converges on the true cost while means and
+#: medians stay hostage to whichever runs the scheduler stalled), and
+#: alternates which engine runs first so drift cannot favor one arm.
+#: Sized so each arm gets enough draws to land in a quiet scheduling
+#: window (the box drifts by more than the true sentinel overhead).
+REPEATS = 16
+
+#: Armed engine must retain this fraction of the disarmed tokens/s.
+MIN_RELATIVE_TPS = 0.95
+
+#: Sampler seed for the overhead lane, chosen so the realized check
+#: count over this workload's ~264 dispatches sits at the nominal
+#: ~1/64 (4 draws, spread across the run) — the printed
+#: checks/dispatches ratio keeps that honest.
+SAMPLER_SEED = 6
+
+#: Long ragged generation lengths (the default chaos workload is too
+#: short: a handful of dispatches makes the realized sampling rate a
+#: small-sample accident in either direction, and a <100ms run makes
+#: the timing itself hostage to scheduler noise).
+OVERHEAD_GENS = (130, 118, 135, 122, 127, 125)
+
+#: Engine geometry sized for OVERHEAD_GENS (n_ctx = 160).
+OVERHEAD_ENGINE_KW = dict(max_batch=3, page_size=4, n_pages=128,
+                          max_pages_per_seq=40, choose_regime=False)
+
+WATCHDOG_S = 60.0
+
+
+def _one_run(eng, reqs, *, rate=None):
+    """(tokens/s, tokens dict, stats) for a single timed run."""
+    eng.reset()
+    ctx = (sentinels.shadowing(rate, seed=SAMPLER_SEED, probe=False)
+           if rate is not None else contextlib.nullcontext())
+    with ctx:
+        t0 = time.perf_counter()
+        res, stats = eng.run(list(reqs))
+        dt = time.perf_counter() - t0
+    tps = stats["generated"] / dt if dt > 0 else 0.0
+    return tps, chaos.tokens_by_rid(res), stats
+
+
+def smoke() -> int:
+    failures = []
+    cfg = get_config("qwen3_8b", smoke=True)
+    model = LM(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    # --- overhead lane -------------------------------------------------
+    reqs = chaos.ragged_workload(cfg, gens=OVERHEAD_GENS)
+    plain_eng = ServingEngine(model, params, **OVERHEAD_ENGINE_KW)
+    armed_eng = ServingEngine(model, params, **OVERHEAD_ENGINE_KW)
+    plain_eng.run(list(reqs))                # jit warm-up, untimed —
+    with sentinels.shadowing(sentinels.DEFAULT_RATE, seed=SAMPLER_SEED,
+                             probe=False):   # incl. the shadow twin
+        armed_eng.run(list(reqs))
+    plain_best, armed_best = 0.0, 0.0
+    plain_tokens, armed_tokens, armed_stats = None, None, {}
+    for rep in range(REPEATS):
+        if rep % 2 == 0:
+            plain_tps, plain_tokens, _ = _one_run(plain_eng, reqs)
+            armed_tps, armed_tokens, armed_stats = _one_run(
+                armed_eng, reqs, rate=sentinels.DEFAULT_RATE)
+        else:
+            armed_tps, armed_tokens, armed_stats = _one_run(
+                armed_eng, reqs, rate=sentinels.DEFAULT_RATE)
+            plain_tps, plain_tokens, _ = _one_run(plain_eng, reqs)
+        plain_best = max(plain_best, plain_tps)
+        armed_best = max(armed_best, armed_tps)
+    rel = armed_best / plain_best if plain_best > 0 else 0.0
+    n_disp = armed_stats["decode_steps"] + armed_stats["prefills"]
+    print(f"smoke sentinels: overhead rate=1/64 "
+          f"plain={plain_best:.1f}tok/s armed={armed_best:.1f}tok/s "
+          f"relative={rel:.3f} "
+          f"checks={armed_stats['shadow_checks']}/{n_disp}")
+    if armed_tokens != plain_tokens:
+        failures.append("overhead: sentinel-armed tokens diverged from "
+                        "the disarmed run with no fault injected")
+    if rel < MIN_RELATIVE_TPS:
+        failures.append(
+            f"overhead: armed engine kept only {rel:.1%} of disarmed "
+            f"tokens/s (floor {MIN_RELATIVE_TPS:.0%})")
+
+    # --- wrong_answer lane ---------------------------------------------
+    planner.clear_memo()
+    breaker.reset()
+    out = chaos.run_chaos("wrong_answer", {"rate": 1.0}, planner=True,
+                          sentinel_rate=1.0, watchdog_s=WATCHDOG_S)
+    f, r = out.faulted_stats, out.relaunch_stats
+    detections = f["golden_mismatches"] + f["shadow_mismatches"]
+    ekw = chaos.DEFAULT_ENGINE_KW
+    dkey = planner.plan_key(cfg, ekw["max_batch"], 1, False,
+                            phase="decode", paged=ekw["page_size"],
+                            kv_len=ekw["page_size"]
+                            * ekw["max_pages_per_seq"])
+    quarantined = schedule_cache.is_quarantined(dkey, V5E) is not None
+    print(f"smoke sentinels: wrong_answer fired={out.fired} "
+          f"identical={out.tokens_identical} detections={detections} "
+          f"quarantined={quarantined} tier={f['exec_tier']} "
+          f"relaunch_tier={r['exec_tier']} "
+          f"relaunch_demotions={r['tier_demotions']}")
+    if out.fired < 1:
+        failures.append("wrong_answer: armed fault never fired — the "
+                        "corruption seam is dead")
+    if detections < 1:
+        failures.append("wrong_answer: corruption served with zero "
+                        "sentinel detections")
+    if not quarantined:
+        failures.append("wrong_answer: decode plan fingerprint was not "
+                        "quarantined on disk")
+    if not out.tokens_identical:
+        failures.append("wrong_answer: served tokens diverged from the "
+                        "fault-free run")
+    if r["exec_tier"] != "configured" or r["tier_demotions"] \
+            or r["golden_mismatches"] or r["shadow_mismatches"]:
+        failures.append(
+            "wrong_answer: relaunch did not replay clean around the "
+            f"quarantine (tier={r['exec_tier']}, "
+            f"demotions={r['tier_demotions']})")
+
+    for msg in failures:
+        print(f"SMOKE FAIL: {msg}", file=sys.stderr)
+    print(f"sentinel smoke: {'FAIL' if failures else 'OK'}",
+          file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main() -> list:
+    smoke()
+    return []
+
+
+if __name__ == "__main__":
+    sys.exit(smoke())

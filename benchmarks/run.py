@@ -49,14 +49,18 @@ def main(argv=None) -> None:
                          "plan replay (bench_planner_serve), and the "
                          "chaos lane — one injected fault per class, "
                          "tokens bit-identical to the fault-free run, "
-                         "no watchdog breach (bench_chaos); "
+                         "no watchdog breach (bench_chaos), and the "
+                         "sentinel lane — shadow verification under 5%% "
+                         "tokens/s overhead at 1/64, injected "
+                         "wrong-answer detected and quarantined, "
+                         "relaunch clean (bench_sentinels); "
                          "writes no JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
         from . import (bench_chaos, bench_mesh_tuning, bench_planner,
-                       bench_planner_serve, bench_serving,
-                       bench_tuning_time)
+                       bench_planner_serve, bench_sentinels,
+                       bench_serving, bench_tuning_time)
         with isolated_schedule_cache():
             rc = bench_tuning_time.smoke()
             rc = bench_mesh_tuning.smoke() or rc
@@ -64,6 +68,7 @@ def main(argv=None) -> None:
             rc = bench_planner.smoke() or rc
             rc = bench_planner_serve.smoke() or rc
             rc = bench_chaos.smoke() or rc
+            rc = bench_sentinels.smoke() or rc
         sys.exit(rc)
 
     from . import (bench_ablation, bench_attention, bench_end_to_end,

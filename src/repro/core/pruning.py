@@ -56,6 +56,40 @@ def rule3_padding_ok(dim: int, tile: int, unit: int = 128,
     return (padded - dim) / dim < max_ratio
 
 
+def validate_schedule(sched: Schedule, hw: TpuSpec = V5E,
+                      unit: int = 128) -> tuple[bool, str]:
+    """Re-check the pruning invariants on a *rebuilt* schedule.
+
+    The warm-cache path rebuilds schedules from persisted records
+    (``core/schedule_cache.py``); a record can be corrupted into
+    something that still parses and rebuilds — tile sizes edited to
+    absurd values, a loop dropped — and such a schedule must never
+    reach Mosaic (docs/reliability.md, "Sentinels").  This re-runs the
+    checks the search itself enforced, so a legitimately tuned outcome
+    always passes: Rule 2 via ``Schedule.valid`` (the rebuild uses
+    ``hard_rule2=True``), Rule 3 via :func:`rule3_padding_ok` per loop,
+    Rule 4 via the same ``vmem_slack`` budget ``heuristic_search``
+    prunes with.  (Rule 1 is a dedup, not a validity property — an
+    un-deduplicated schedule is wasteful, not wrong.)
+
+    Returns ``(ok, reason)``; ``reason`` is "" when valid.
+    """
+    if not sched.valid:
+        return False, sched.invalid_reason or "invalid_schedule"
+    loops = sched.chain.loops
+    if set(sched.tile_sizes) != set(loops):
+        return False, "tile_sizes_do_not_cover_loops"
+    for name, ext in loops.items():
+        t = int(sched.tile_sizes[name])
+        if t < 1:
+            return False, f"bad_tile:{name}={t}"
+        if not rule3_padding_ok(ext, t, unit):
+            return False, f"rule3_padding:{name}={t}"
+    if vmem_estimate(sched, hw) > hw.vmem_slack * hw.vmem_bytes:
+        return False, "rule4_vmem"
+    return True, ""
+
+
 def stitched_vmem_ok(chain: Chain, extra_bytes: int, hw: TpuSpec = V5E,
                      unit: int = 128,
                      full_loops: tuple = ()) -> bool:

@@ -102,6 +102,29 @@ def model_fingerprint(hw: TpuSpec) -> str:
     return sha256(payload.encode()).hexdigest()[:16]
 
 
+def host_fingerprint() -> str:
+    """Hash of the *execution substrate* a record was produced on.
+
+    ``model_fingerprint`` keys the analytical model + hardware spec —
+    two hosts with the same ``TpuSpec`` constants share entries by
+    design (one replica tunes, the fleet replays).  But a record
+    replayed under a different jax version / backend / platform may
+    lower differently than where it was stored, which is exactly the
+    silent-corruption risk the sentinels' golden probes guard: a
+    stored-vs-current ``host_fingerprint`` mismatch is the trigger for
+    a numeric probe before the entry is trusted
+    (docs/reliability.md, "Sentinels").  Deliberately NOT part of the
+    entry path: a host change must not orphan the cache, only
+    re-verify it.
+    """
+    import platform
+
+    import jax
+    payload = json.dumps([jax.__version__, jax.default_backend(),
+                          platform.platform()])
+    return sha256(payload.encode()).hexdigest()[:16]
+
+
 # ---------------------------------------------------------------------------
 # Tiling-expression (de)serialization: Loop tree <-> nested lists
 # ---------------------------------------------------------------------------
@@ -245,6 +268,10 @@ def load(key: tuple, hw: TpuSpec,
             "prune_stats": dict(rec["prune_stats"]),
             "history": [(int(i), float(t)) for i, t in rec["history"]],
             "params": dict(rec["params"]),
+            # records from before the sentinels layer carry no host
+            # stamp: None reads as "unknown host", which probe logic
+            # treats like a host change (verify before trusting)
+            "host": rec.get("host"),
         }
     except (ValueError, KeyError, TypeError, AttributeError):
         # parsed as JSON but the payload is mangled: quarantine too
@@ -281,8 +308,22 @@ def store(key: tuple, hw: TpuSpec, *, expr: Scope,
         "prune_stats": {k: int(v) for k, v in prune_stats.items()},
         "history": [[int(i), float(t)] for i, t in history],
         "params": params,
+        "host": host_fingerprint(),
     }
     return _atomic_write(entry_path(key, hw, trial), rec)
+
+
+def quarantine_entry(key: tuple, hw: TpuSpec,
+                     trial: str = "analytic") -> Optional[Path]:
+    """Move the cached entry for ``key`` aside to ``.corrupt``.
+
+    The golden-probe analogue of the corrupt-read path: a record that
+    *parses* but fails schedule re-validation or a numeric probe is
+    quarantined as evidence and the path frees up for a retune.  This
+    is entry-level (the record itself is bad), unlike the breaker's
+    denylist quarantine which is fingerprint-level (the record is kept,
+    dispatch is denied)."""
+    return _quarantine_corrupt(entry_path(key, hw, trial))
 
 
 # ---------------------------------------------------------------------------

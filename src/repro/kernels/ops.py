@@ -51,14 +51,24 @@ def _guarded(fingerprint: tuple, kernel_fn, ref_fn):
     denylist record next to the cached schedule) before degrading to
     the twin.  The twin computes the same values — tolerances aside,
     a degraded call is indistinguishable to the caller.
+
+    The tail is also a sentinel seam: ``wrong_answer`` faults perturb
+    the fused output here, and when shadow verification is armed
+    (``reliability/sentinels.py``) a sampled subset of dispatches is
+    re-run on the twin and compared within per-dtype tolerance —
+    a mismatch quarantines the fingerprint exactly like a crash, but
+    the caller still receives the twin's correct output.
     """
     from ..reliability import breaker as _breaker
     from ..reliability import faults as _faults
+    from ..reliability import sentinels as _sentinels
     if _breaker.is_open(fingerprint):
         return ref_fn()
     try:
         _faults.fault_point("kernel_dispatch", op=str(fingerprint[0]))
-        return kernel_fn()
+        out = _sentinels.corrupt_if_armed(kernel_fn(),
+                                          op=str(fingerprint[0]))
+        return _sentinels.shadow_kernel(fingerprint, out, ref_fn)
     except Exception as e:  # noqa: BLE001 - degrade on any dispatch error
         _breaker.record_failure(fingerprint,
                                 reason=f"{type(e).__name__}: {e}")

@@ -42,15 +42,26 @@ def main(argv=None) -> dict:
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient reduction over "
+                         "the data axis (dist.compression) — the "
+                         "cross-pod DCI saver; needs --model-axis 1")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=not args.full)
     mesh = make_host_mesh(model_axis=args.model_axis)
     n_data = mesh.shape["data"]
+    if args.compress_grads and args.model_axis != 1:
+        ap.error("--compress-grads shard_maps the data reduction with "
+                 "replicated params; tensor parallelism (--model-axis "
+                 "> 1) is not supported on that path")
     rules = (Rules(data=("data",), model="model",
                    tp="model" if args.model_axis > 1 else None)
-             if mesh.devices.size > 1 else Rules.disabled())
-    rt = Runtime(rules=rules, mesh=mesh if mesh.devices.size > 1 else None,
+             if mesh.devices.size > 1 and not args.compress_grads
+             else Rules.disabled())
+    rt = Runtime(rules=rules,
+                 mesh=mesh if mesh.devices.size > 1
+                 and not args.compress_grads else None,
                  remat=False)
     model = S.build_model(cfg, rt)
     from ..optim.adamw import AdamW, cosine_schedule
@@ -68,8 +79,15 @@ def main(argv=None) -> dict:
     pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                     global_batch=args.batch, seed=args.seed))
 
-    train_step = jax.jit(S.make_train_step(model, opt),
-                         donate_argnums=(0, 1))
+    if args.compress_grads:
+        print(f"gradient compression: int8+EF psum over data axis "
+              f"({n_data} shard{'s' if n_data != 1 else ''})")
+        train_step = jax.jit(
+            S.make_compressed_train_step(model, opt, mesh),
+            donate_argnums=(0, 1, 2))
+    else:
+        train_step = jax.jit(S.make_train_step(model, opt),
+                             donate_argnums=(0, 1))
 
     def batch_for(step: int) -> dict:
         b = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
@@ -88,10 +106,13 @@ def main(argv=None) -> dict:
     losses = []
 
     def step_fn(state, batch):
-        params, opt_state = state
-        params, opt_state, info = train_step(params, opt_state, batch)
-        return (params, opt_state), {"loss": float(info["loss"]),
-                                     "grad_norm": float(info["grad_norm"])}
+        # state is (params, opt_state) or, with --compress-grads,
+        # (params, opt_state, residuals) — both train_steps return
+        # the new state leaves followed by the info dict
+        out = train_step(*state, batch)
+        info = out[-1]
+        return tuple(out[:-1]), {"loss": float(info["loss"]),
+                                 "grad_norm": float(info["grad_norm"])}
 
     def on_step(step, metrics):
         losses.append(metrics["loss"])
@@ -100,20 +121,21 @@ def main(argv=None) -> dict:
                   f"gnorm {metrics['grad_norm']:.3f} "
                   f"{metrics['step_time']*1e3:.0f}ms")
 
+    state = (params, opt_state)
+    if args.compress_grads:
+        state = state + (S.init_grad_residuals(params, n_data),)
     if args.ckpt_dir:
         runner = StepRunner(step_fn=step_fn, batch_at=batch_for,
                             ckpt_dir=args.ckpt_dir,
                             ckpt_every=args.ckpt_every, on_step=on_step)
-        (params, opt_state), log = runner.run((params, opt_state),
-                                              args.steps)
+        state, log = runner.run(state, args.steps)
     else:
-        state = (params, opt_state)
         for step in range(args.steps):
             t0 = time.perf_counter()
             state, m = step_fn(state, batch_for(step))
             m["step_time"] = time.perf_counter() - t0
             on_step(step, m)
-        params, opt_state = state
+    params, opt_state = state[0], state[1]
 
     print(f"final loss: {losses[-1]:.4f} (first: {losses[0]:.4f})")
     return {"first_loss": losses[0], "final_loss": losses[-1],

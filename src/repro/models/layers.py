@@ -564,6 +564,20 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
     ps = cache["k_pages"].shape[2]
     nm = mesh.shape[rules.model] if (mesh is not None and rules.model) else 1
     mp = page_table.shape[1]
+
+    def _twin() -> jax.Array:
+        # the XLA gather twin: page-table gather + per-request
+        # positional attention — the reference body every other regime
+        # must match bit-identically (f32), and the shadow-verification
+        # oracle for the fused branch below
+        kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
+                        group, axis=1)
+        vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),
+                        group, axis=1)
+        kv_pos = KP.paged_kv_positions(page_table, ps)
+        return _paged_positional_attention(qt, kk, vv, positions, kv_pos,
+                                           win, scale)
+
     if (dist_decode and rules.enabled and mesh is not None and rules.model
             and s == 1 and nm > 1 and mp % nm == 0):
         from ..dist.ring_dispatch import paged_ring_decode_attention
@@ -583,6 +597,7 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
         # (docs/reliability.md).
         from ..reliability import breaker as _breaker
         from ..reliability import faults as _faults
+        from ..reliability import sentinels as _sentinels
         bq, bkv = block if block is not None else (128, 128)
         fp = ("attn-paged", b, qt.shape[1], ps, mp, win, bq, bkv,
               str(qt.dtype))
@@ -590,20 +605,19 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
             try:
                 _faults.fault_point("kernel_dispatch", op="attn-paged")
                 from ..kernels.attention import fused_attention_paged
-                return fused_attention_paged(
+                out = fused_attention_paged(
                     qt, cache["k_pages"], cache["v_pages"], page_table,
                     positions[:, -1] + 1, bq=bq, bkv=bkv, window=win,
                     scale=scale)
+                # sentinel seam: wrong_answer corruption + sampled
+                # shadow verification against the gather twin
+                # (no-ops while tracing or with sentinels disarmed)
+                out = _sentinels.corrupt_if_armed(out, op="attn-paged")
+                return _sentinels.shadow_kernel(fp, out, _twin)
             except Exception as e:  # noqa: BLE001 - degrade to twin
                 _breaker.record_failure(
                     fp, reason=f"{type(e).__name__}: {e}")
-    kk = jnp.repeat(KP.gather_pages(cache["k_pages"], page_table),
-                    group, axis=1)
-    vv = jnp.repeat(KP.gather_pages(cache["v_pages"], page_table),
-                    group, axis=1)
-    kv_pos = KP.paged_kv_positions(page_table, ps)
-    return _paged_positional_attention(qt, kk, vv, positions, kv_pos,
-                                       win, scale)
+    return _twin()
 
 
 # ---------------------------------------------------------------------------
@@ -698,9 +712,12 @@ def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
     win = cfg.window
     paged = cache is not None
     if paged and "k_pages" not in cache:
-        raise ValueError("run_planned_layer executes paged serving "
-                         "caches only; contiguous caches stay on the "
-                         "hand-wired path (models/lm.py)")
+        raise NotImplementedError(
+            "run_planned_layer executes paged serving caches only; "
+            "contiguous-cache decode is served by the hand-wired path "
+            "— models/lm.py takes it automatically (the planner branch "
+            "skips non-paged caches), or force it explicitly with "
+            "Runtime(planner=False)")
     if paged and page_table is None:
         raise ValueError("paged cache requires a page_table")
 

@@ -65,6 +65,11 @@ class Runtime:
     # glue into carved chains as prologue/epilogue (FusionStitching).
     # False keeps every glue op standalone — bit-identical to the
     # hand-wired layer, which tests/test_planner.py asserts.
+    sentinels: bool = False  # arm the in-step activation health
+    # monitors (reliability/sentinels.py::healthy): the serving engine
+    # checks prefill/decode logits for NaN/Inf/explosion and evicts
+    # the offending slot with the honest "health" outcome.  Off by
+    # default — the check is cheap but not free on the decode path.
 
 
 def _layer_types(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:

@@ -1,13 +1,18 @@
 """Fault injection and graceful degradation for the served stack.
 
-Three pieces (docs/reliability.md):
+Four pieces (docs/reliability.md):
 
 * :mod:`repro.reliability.faults` — seeded, deterministic fault
   injection threaded through the production seams (kernel dispatch,
-  schedule/plan load, page allocation, the engine step loop).
+  schedule/plan load, page allocation, the engine step loop, and the
+  silent-corruption ``wrong_answer`` seam).
 * :mod:`repro.reliability.breaker` — per-fingerprint circuit breaker
   that quarantines failing schedules/plans via persistent denylist
   records (distinct from deletion; no retuning storms on relaunch).
+* :mod:`repro.reliability.sentinels` — correctness sentinels: sampled
+  shadow verification against the XLA twin, golden probes before
+  serving traffic, and activation health checks — the detectors that
+  catch *wrong answers* (which never raise) and feed the breaker.
 * :mod:`repro.reliability.watchdog` — soft step-latency watchdog for
   the serving loop.
 
@@ -18,10 +23,12 @@ used by ``tests/test_reliability.py`` and ``benchmarks/bench_chaos.py``.
 from .breaker import BREAKER, CircuitBreaker            # noqa: F401
 from .faults import (FAULT_KINDS, FaultSpec, InjectedFault,  # noqa: F401
                      active, check, clear, fault_point, inject, injected)
+from .sentinels import SentinelSpec, shadowing          # noqa: F401
 from .watchdog import StepWatchdog                      # noqa: F401
 
 __all__ = [
     "FAULT_KINDS", "FaultSpec", "InjectedFault",
     "inject", "injected", "clear", "active", "check", "fault_point",
-    "CircuitBreaker", "BREAKER", "StepWatchdog",
+    "CircuitBreaker", "BREAKER", "SentinelSpec", "shadowing",
+    "StepWatchdog",
 ]

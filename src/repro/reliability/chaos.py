@@ -22,6 +22,7 @@ computes them.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -33,6 +34,7 @@ from ..models.lm import LM, Runtime
 from ..serving.engine import ServingEngine
 from . import breaker as _breaker
 from . import faults as _faults
+from . import sentinels as _sentinels
 
 #: Engine geometry mirroring tests/test_serving.py: small enough for
 #: CPU CI, ragged enough to exercise growth and eviction.
@@ -79,7 +81,9 @@ def run_chaos(kind: str, inject_kw: Optional[dict] = None, *,
               engine_kw: Optional[dict] = None,
               watchdog_s: Optional[float] = None,
               arch: str = "qwen3_8b", workload_seed: int = 0,
-              outcomes_ok=("complete",)) -> ChaosOutcome:
+              outcomes_ok=("complete",),
+              sentinel_rate: Optional[float] = None,
+              sentinel_seed: int = 0) -> ChaosOutcome:
     """Serve the ragged workload under one armed fault class.
 
     planner: serve planner-carved blocks (``Runtime(planner=True,
@@ -87,6 +91,13 @@ def run_chaos(kind: str, inject_kw: Optional[dict] = None, *,
     are live.  choose_regime: price the paged regime at construction
     (the production default), putting ``fuse_*`` schedule loads on the
     construction path — the seam the ``cache_corrupt`` class targets.
+
+    sentinel_rate: arm the correctness sentinels
+    (``sentinels.shadowing``) around ALL THREE phases at this shadow
+    sampling rate — required for the ``wrong_answer`` class, whose
+    corruption never raises and is invisible to the crash path.  The
+    baseline runs with sentinels armed too, so a sentinel-induced
+    behaviour difference would break the token-identity invariant.
 
     Raises AssertionError when any phase fails to complete every
     request with an outcome in ``outcomes_ok``.
@@ -105,13 +116,21 @@ def run_chaos(kind: str, inject_kw: Optional[dict] = None, *,
         # fresh-process semantics for every phase: in-process plan
         # memo, tuned-kernel cache and breaker state dropped — only
         # the DISK cache (entries + denylist records) carries over, so
-        # construction re-loads records exactly like a relaunch would
+        # construction re-loads records exactly like a relaunch would.
+        # Sentinels (when requested) re-arm per phase with the same
+        # seed, so each phase samples the same dispatch ordinals — a
+        # relaunch's sampler replays, it does not resume.
         from ..core import api, planner as planner_mod
         planner_mod.clear_memo()
         api.clear_cache()
         _breaker.reset()
-        eng = ServingEngine(model, params, **kw)
-        res, stats = eng.run(list(reqs))
+        sentry = (_sentinels.shadowing(sentinel_rate,
+                                       seed=sentinel_seed)
+                  if sentinel_rate is not None
+                  else contextlib.nullcontext())
+        with sentry:
+            eng = ServingEngine(model, params, **kw)
+            res, stats = eng.run(list(reqs))
         bad = [r for r in res if r.outcome not in outcomes_ok]
         assert not bad, f"requests failed under {kind}: {bad}"
         assert len(res) == len(reqs)

@@ -25,7 +25,8 @@ from typing import Callable, Dict, Iterator, Optional
 
 __all__ = [
     "FAULT_KINDS", "InjectedFault", "FaultSpec",
-    "inject", "injected", "clear", "active", "check", "fault_point",
+    "inject", "injected", "clear", "active", "armed", "check",
+    "fault_point",
 ]
 
 #: The fault taxonomy.  Each kind names one production seam; arming a
@@ -42,6 +43,10 @@ FAULT_KINDS = (
     "page_exhaustion",
     # the serving step dispatch itself (any execution tier)
     "engine_step",
+    # silent corruption: a fused output is *perturbed* instead of
+    # raising — only the sentinels layer (reliability/sentinels.py)
+    # can observe it; crash-path degradation never sees this kind
+    "wrong_answer",
 )
 
 
@@ -122,6 +127,13 @@ def active() -> Dict[str, FaultSpec]:
     """Snapshot of the armed specs (for assertions on fire counts)."""
     with _LOCK:
         return dict(_REGISTRY)
+
+
+def armed() -> bool:
+    """True iff *any* fault kind is armed — the lock-free predicate
+    per-dispatch seams use to skip context construction entirely on
+    the production path."""
+    return bool(_REGISTRY)
 
 
 def check(kind: str, **context) -> bool:

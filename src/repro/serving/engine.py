@@ -54,6 +54,7 @@ import numpy as np
 
 from ..reliability import breaker as _breaker
 from ..reliability import faults as _faults
+from ..reliability import sentinels as _sentinels
 from ..reliability.watchdog import StepWatchdog
 from . import kv_pages as KP
 
@@ -61,7 +62,11 @@ from . import kv_pages as KP
 TIERS = ("configured", "xla-twin", "eager-twin")
 
 #: Per-request outcomes reported on ``FinishedRequest.outcome``.
-OUTCOMES = ("complete", "deadline", "preempt_budget", "drained")
+#: "health" = evicted by the activation health monitor
+#: (``Runtime(sentinels=True)``): its step produced NaN/Inf/exploded
+#: logits, and the partial tokens are reported honestly.
+OUTCOMES = ("complete", "deadline", "preempt_budget", "drained",
+            "health")
 
 
 @dataclasses.dataclass
@@ -167,7 +172,10 @@ class ServingEngine:
                       "ctx_tokens": 0, "page_slot_steps": 0,
                       "admit_requeues": 0, "tier_demotions": 0,
                       "deadline_evictions": 0, "preempt_failures": 0,
-                      "drained": 0}
+                      "drained": 0, "shadow_checks": 0,
+                      "shadow_mismatches": 0, "golden_probes": 0,
+                      "golden_mismatches": 0, "health_evictions": 0,
+                      "reclaimed_pages": 0}
         self.regime, self.regime_source, self.regime_times, tiles = \
             self._choose_regime(model) if choose_regime else \
             ("paged-spatial", None, {}, None)
@@ -185,6 +193,8 @@ class ServingEngine:
                 rt, dist_decode_attn=want_ring and rt.mesh is not None,
                 paged_block=tiles))
         self.model = model
+        self._window = int(model.cfg.window or 0)
+        self._shadow_fns = None      # lazily jitted tier-1 twin pair
         self.cache = model.init_paged_cache(n_pages, page_size)
         self._build_exec()
         if model.rt.planner:
@@ -208,6 +218,7 @@ class ServingEngine:
                         model.cfg, self.max_batch, 1,
                         stitch=model.rt.stitch, phase="decode",
                         paged=self.page_size, kv_len=self.n_ctx)
+        self._golden_probe()
 
     # ------------------------------------------------------------------
     # Tiered execution (fused/planned -> XLA twin -> eager twin)
@@ -236,9 +247,12 @@ class ServingEngine:
             self._decode = m.decode_step_paged
             self._prefill = m.prefill_paged
 
-    def _note_tier_failure(self, phase: str, err: Exception) -> None:
+    def _note_tier_failure(self, phase: str, reason: str) -> None:
         """Quarantine what tier 0 was executing before demoting, so a
-        relaunch starts on the degraded path instead of re-failing."""
+        relaunch starts on the degraded path instead of re-failing.
+        ``reason`` is recorded verbatim on the breaker denylist entry —
+        crashes pass ``"TypeName: msg"``, sentinel mismatches pass a
+        shadow/golden-probe description."""
         if self.exec_tier == 0 and self.model.rt.planner:
             from ..core import planner as planner_mod
             if planner_mod.plannable(self.model.cfg):
@@ -247,12 +261,95 @@ class ServingEngine:
                     self.model.rt.stitch, phase="decode",
                     paged=self.page_size, kv_len=self.n_ctx)
                 _breaker.record_failure(
-                    dkey, reason=f"engine {phase}: "
-                                 f"{type(err).__name__}: {err}")
+                    dkey, reason=f"engine {phase}: {reason}")
         if self.verbose:
             print(f"serving tier demotion on {phase}: "
                   f"{TIERS[self.exec_tier]} -> "
-                  f"{TIERS[self.exec_tier + 1]} ({err})")
+                  f"{TIERS[self.exec_tier + 1]} ({reason})")
+
+    def _demote_tier0(self, phase: str, reason: str) -> None:
+        """Sticky demotion off the configured tier on a *correctness*
+        signal (shadow or golden-probe mismatch) — same quarantine +
+        rebuild path the crash handler takes, minus the exception."""
+        if self.exec_tier != 0:
+            return
+        self._note_tier_failure(phase, reason)
+        self.exec_tier += 1
+        self.stats["tier_demotions"] += 1
+        self._build_exec()
+
+    def _shadow_exec(self, phase: str, args):
+        """Run ``args`` through the tier-1 XLA twin — the reference the
+        sentinels compare against.  Jitted lazily and cached: the twin
+        pair is tier-independent, so a later demotion does not
+        invalidate it."""
+        if self._shadow_fns is None:
+            m = self._tier_model(1)
+            self._shadow_fns = (jax.jit(m.prefill_paged),
+                                jax.jit(m.decode_step_paged))
+        fn = self._shadow_fns[1] if phase == "decode" \
+            else self._shadow_fns[0]
+        return fn(*args)
+
+    def _sentinel_check(self, phase: str, args, out):
+        """Sampled shadow verification of one tier-0 dispatch
+        (docs/reliability.md §Sentinels).  On the sampler's draw the
+        SAME pure inputs re-run through the XLA twin; a bitwise
+        mismatch (the serving contract is bit-identity — f32, stitching
+        off) quarantines the decode plan, demotes stickily to the twin,
+        and serves the twin's output (its cache is the one that was
+        verified)."""
+        spec = _sentinels.active()
+        if spec is None:
+            return out
+        if _faults.armed():
+            out = _sentinels.corrupt_if_armed(out, op=f"engine-{phase}")
+        if not spec.sample():
+            return out
+        self.stats["shadow_checks"] += 1
+        ref = self._shadow_exec(phase, args)
+        ok = _sentinels.outputs_equal(out, ref)
+        spec.note_check(ok)
+        if ok:
+            return out
+        self.stats["shadow_mismatches"] += 1
+        self._demote_tier0(
+            phase, "shadow mismatch: configured output diverged "
+                   "from the XLA twin on identical inputs")
+        return ref
+
+    def _golden_probe(self) -> None:
+        """Golden probe at construction: before any traffic, one canned
+        all-inactive decode dispatch (every slot masked to the scratch
+        page) runs through the configured tier AND the XLA twin and
+        must agree.  Catches a corrupt cached plan/schedule *before* it
+        serves a token — a probe mismatch quarantines the decode plan
+        and starts the engine on the twin tier.  Outputs are discarded;
+        ``self.cache`` is untouched."""
+        spec = _sentinels.active()
+        if spec is None or not spec.probe:
+            return
+        self.stats["golden_probes"] += 1
+        tokens = jnp.zeros((self.max_batch,), jnp.int32)
+        positions = jnp.full((self.max_batch,), -1, jnp.int32)
+        table = jnp.asarray(KP.table_array([None] * self.max_batch,
+                                           self.max_pages))
+        args = (self.params, self.cache, tokens, positions, table)
+        try:
+            out = self._decode(*args)
+            out = _sentinels.corrupt_if_armed(out, op="engine-golden")
+            ref = self._shadow_exec("decode", args)
+            ok = _sentinels.outputs_equal(out, ref)
+        except Exception as e:  # noqa: BLE001 - probe failure = probe
+            ok = False          # mismatch; serve from the twin
+            if self.verbose:
+                print(f"golden probe raised: {type(e).__name__}: {e}")
+        spec.note_probe(ok)
+        if not ok:
+            self.stats["golden_mismatches"] += 1
+            self._demote_tier0(
+                "decode", "golden probe: canned dispatch diverged "
+                          "from the XLA twin before serving")
 
     def _exec(self, phase: str, *args):
         """Run one prefill/decode dispatch through the fallback chain.
@@ -270,11 +367,15 @@ class ServingEngine:
                 _faults.fault_point("engine_step", op=phase,
                                     tier=self.exec_tier)
                 fn = self._decode if phase == "decode" else self._prefill
-                return fn(*args)
+                out = fn(*args)
+                if self.exec_tier == 0:
+                    out = self._sentinel_check(phase, args, out)
+                return out
             except Exception as e:  # noqa: BLE001 - demote and retry
                 if self.exec_tier >= len(TIERS) - 1:
                     raise
-                self._note_tier_failure(phase, e)
+                self._note_tier_failure(phase,
+                                        f"{type(e).__name__}: {e}")
                 self.exec_tier += 1
                 self.stats["tier_demotions"] += 1
                 self._build_exec()
@@ -384,6 +485,18 @@ class ServingEngine:
         logits, self.cache = self._exec(
             "prefill", self.params, jnp.asarray(toks), self.cache,
             table, jnp.int32(plen))
+        self.stats["prefills"] += 1
+        if self.model.rt.sentinels and not bool(
+                np.all(np.asarray(_sentinels.healthy(logits[:1])))):
+            # activation health monitor: the prefill produced
+            # NaN/Inf/exploded logits — evict honestly instead of
+            # admitting a request whose every future token is garbage
+            alloc.release(self.pool)
+            self.stats["health_evictions"] += 1
+            self._finish_request(pend.rid, pend.base_prompt_len,
+                                 pend.done, pend.submit_step,
+                                 pend.n_preempted, "health")
+            return True
         tok = int(jnp.argmax(logits[0]))
         slot = _Slot(pend.rid, pend.prompt, pend.base_prompt_len,
                      pend.done + [tok], pend.max_new, alloc,
@@ -392,7 +505,6 @@ class ServingEngine:
                      deadline=pend.deadline)
         self._admit_seq += 1
         self.slots[free[0]] = slot
-        self.stats["prefills"] += 1
         self._maybe_finish(free[0])
         return True
 
@@ -509,8 +621,26 @@ class ServingEngine:
             self._step_inner()
         return self.finished[n_done:]
 
+    def _reclaim_window(self) -> None:
+        """Sliding-window page reclamation: once a request's next write
+        position ``p`` puts every kv slot below ``p - window + 1``
+        permanently outside the attention window, the pages wholly
+        covered by those slots go back to the pool (kv_pages.py
+        ``reclaim_below``).  Bit-identical to keeping them — the window
+        mask already rejected those slots — but the freed pages fund
+        admission and growth, so long windowed generations stop
+        monopolising the pool."""
+        if self._window <= 0:
+            return
+        for slot in self.slots:
+            if slot is None:
+                continue
+            self.stats["reclaimed_pages"] += slot.alloc.reclaim_below(
+                slot.pos + 1 - self._window, self.pool)
+
     def _step_inner(self) -> None:
         self._expire_deadlines()
+        self._reclaim_window()
         # running slots take their growth pages BEFORE admission sees
         # the free count, and admission reserves each fresh request's
         # first decode slot — so the second growth pass below can only
@@ -550,13 +680,23 @@ class ServingEngine:
             "decode", self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), table)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        health = np.asarray(_sentinels.healthy(logits)) \
+            if self.model.rt.sentinels else None
         self.stats["decode_steps"] += 1
         self.stats["slot_steps"] += self.max_batch
         self.stats["active_steps"] += len(active)
         for i in active:
             slot = self.slots[i]
             self.stats["ctx_tokens"] += slot.pos + 1
-            self.stats["page_slot_steps"] += len(slot.alloc.pages)
+            self.stats["page_slot_steps"] += sum(
+                1 for p in slot.alloc.pages if p != KP.RECLAIMED)
+            if health is not None and not health[i]:
+                # activation health monitor: this slot's logits went
+                # NaN/Inf/exploded — its kv is poisoned, evict with
+                # the partial tokens instead of sampling from garbage
+                self.stats["health_evictions"] += 1
+                self._evict_slot(i, "health")
+                continue
             slot.generated.append(int(nxt[i]))
             self._maybe_finish(i)
 

@@ -14,6 +14,7 @@ import glob
 import json
 import os
 import threading
+import time
 
 import jax
 import numpy as np
@@ -23,7 +24,7 @@ from repro.configs import get_config
 from repro.core import api, planner, schedule_cache
 from repro.core.perf_model import V5E
 from repro.models.lm import LM, Runtime
-from repro.reliability import breaker, chaos, faults
+from repro.reliability import breaker, chaos, faults, sentinels
 from repro.reliability.faults import InjectedFault
 from repro.reliability.watchdog import StepWatchdog
 from repro.serving.engine import ServingEngine
@@ -33,17 +34,19 @@ CFG = get_config("qwen3_8b", smoke=True)
 
 @pytest.fixture(autouse=True)
 def _hermetic(tmp_path, monkeypatch):
-    """Every test gets an empty cache dir and clean registry/breaker
-    state — chaos runs must never leak quarantine records into each
-    other (or into the rest of the suite)."""
+    """Every test gets an empty cache dir and clean registry/breaker/
+    sentinel state — chaos runs must never leak quarantine records
+    into each other (or into the rest of the suite)."""
     monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
     faults.clear()
     breaker.reset()
+    sentinels.disable()
     planner.clear_memo()
     api.clear_cache()
     yield tmp_path
     faults.clear()
     breaker.reset()
+    sentinels.disable()
     planner.clear_memo()
     api.clear_cache()
 
@@ -429,3 +432,333 @@ def test_concurrent_plan_writers_race_same_key(tmp_path):
     assert rec["pad"] == "x" * (1000 + w)    # payload internally whole
     assert not list(tmp_path.glob("*.tmp"))
     assert not glob.glob(str(tmp_path / "*.corrupt"))
+
+
+# ---------------------------------------------------------------------------
+# correctness sentinels: shadow verification, golden probes, health
+# ---------------------------------------------------------------------------
+
+def test_shadow_sampler_is_deterministic():
+    def pattern(seed, rate=0.25, n=200):
+        spec = sentinels.SentinelSpec(rate=rate, seed=seed)
+        return [spec.sample() for _ in range(n)]
+
+    a, b = pattern(3), pattern(3)
+    assert a == b                      # same seed -> same ordinals
+    assert any(a) and not all(a)       # rate actually thins
+    assert pattern(4) != a             # seed is live
+    assert 20 <= sum(a) <= 80          # ~rate * n, deterministic
+    assert all(sentinels.SentinelSpec(rate=1.0).sample()
+               for _ in range(10))
+    assert not any(sentinels.SentinelSpec(rate=0.0).sample()
+                   for _ in range(10))
+    with pytest.raises(ValueError):
+        sentinels.enable(rate=1.5)
+    assert sentinels.active() is None  # failed enable arms nothing
+
+
+def test_shadow_catches_wrong_answer_at_kernel_seam():
+    """wrong_answer perturbs the fused MLP output without raising; the
+    armed shadow sampler re-runs the XLA twin, serves ITS values on the
+    detecting call, and quarantines the fingerprint on disk."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(32, 16).astype(np.float32)
+    wu = rng.randn(16, 32).astype(np.float32)
+    wd = rng.randn(32, 16).astype(np.float32)
+    from repro.kernels import ops
+    want = np.asarray(ops.mlp_chain(x, wu, wd, mode="ref"))
+    fp = ("mlp", 32, 32, 16, "float32", False, "silu")
+    with sentinels.shadowing(1.0) as sp:
+        with faults.injected("wrong_answer", rate=1.0) as spec:
+            got = np.asarray(ops.mlp_chain(x, wu, wd, mode="interpret"))
+        assert spec.n_fired >= 1
+    np.testing.assert_array_equal(got, want)   # twin's output served
+    assert sp.n_checked == 1 and sp.n_mismatched == 1
+    assert breaker.is_open(fp)
+    assert schedule_cache.is_quarantined(fp, V5E) is not None
+    # without the sentinels armed the corruption would have sailed
+    # through: the crash path sees no exception (lift the quarantine
+    # first — an open breaker routes to the twin and would mask it)
+    faults.clear()
+    schedule_cache.clear_quarantine(fp, V5E)
+    breaker.reset()
+    with faults.injected("wrong_answer", rate=1.0):
+        silent = np.asarray(ops.mlp_chain(x, wu, wd, mode="interpret"))
+    assert not np.array_equal(silent, want)
+
+
+def test_sentinels_no_fault_bit_identical(_model):
+    """Sentinels armed at rate 1.0 with no fault: every engine dispatch
+    shadow-verified, zero mismatches, and the served tokens are
+    bit-identical to a sentinel-free run."""
+    model, params = _model
+    p = np.arange(5, dtype=np.int32) % CFG.vocab
+    reqs = [(p, 4), (np.arange(7, dtype=np.int32) % CFG.vocab, 6)]
+    base, _ = ServingEngine(model, params, **ENG_KW).run(list(reqs))
+    with sentinels.shadowing(1.0):
+        eng = ServingEngine(model, params, **ENG_KW)
+        res, stats = eng.run(list(reqs))
+    assert [r.tokens for r in res] == [r.tokens for r in base]
+    assert stats["golden_probes"] == 1
+    assert stats["golden_mismatches"] == 0
+    assert stats["shadow_checks"] > 0
+    assert stats["shadow_mismatches"] == 0
+    assert stats["exec_tier"] == "configured"
+
+
+def test_golden_probe_demotes_before_traffic(_model):
+    """A wrong answer on the construction probe's canned dispatch means
+    the engine never serves a token from the bad tier: demoted to the
+    XLA twin before the first request, tokens identical."""
+    model, params = _model
+    p = np.arange(5, dtype=np.int32) % CFG.vocab
+    base, _ = ServingEngine(model, params, **ENG_KW).run([(p, 4)])
+    with sentinels.shadowing(0.0, probe=True):
+        with faults.injected(
+                "wrong_answer",
+                trigger=lambda ctx: ctx.get("op") == "engine-golden"):
+            eng = ServingEngine(model, params, **ENG_KW)
+    assert eng.exec_tier == 1
+    assert eng.stats["golden_probes"] == 1
+    assert eng.stats["golden_mismatches"] == 1
+    assert eng.stats["tier_demotions"] == 1
+    res, _ = eng.run([(p, 4)])
+    assert [r.tokens for r in res] == [r.tokens for r in base]
+
+
+def test_health_monitor_evicts_nan_decode_slot(_model):
+    import jax.numpy as jnp
+    _, params = _model
+    model = LM(CFG, Runtime(sentinels=True))
+    eng = ServingEngine(model, params, **ENG_KW)
+    p = np.arange(5, dtype=np.int32) % CFG.vocab
+    eng.submit(p, 6)
+    eng.step()                         # healthy admit + first decode
+    orig = eng._decode
+
+    def poisoned(*args):
+        logits, cache = orig(*args)
+        return jnp.full_like(logits, jnp.nan), cache
+
+    eng._decode = poisoned
+    eng.step()
+    (res,) = eng.finished
+    assert res.outcome == "health"
+    assert 1 <= len(res.tokens) < 6    # honest partial tokens
+    assert eng.stats["health_evictions"] == 1
+    assert eng.pool.n_free == eng.pool.n_pages - 1
+    eng._decode = orig                 # engine stays serviceable
+    res2, _ = eng.run([(p, 2)])
+    assert res2[-1].outcome == "complete"
+
+
+def test_health_monitor_rejects_inf_prefill(_model):
+    _, params = _model
+    model = LM(CFG, Runtime(sentinels=True))
+    eng = ServingEngine(model, params, **ENG_KW)
+    orig = eng._prefill
+
+    def poisoned(*args):
+        logits, cache = orig(*args)
+        import jax.numpy as jnp
+        return jnp.full_like(logits, jnp.inf), cache
+
+    eng._prefill = poisoned
+    eng.submit(np.arange(5, dtype=np.int32) % CFG.vocab, 4)
+    eng.step()
+    (res,) = eng.finished
+    assert res.outcome == "health" and res.tokens == []
+    assert eng.stats["health_evictions"] == 1
+    assert all(s is None for s in eng.slots)
+    assert eng.pool.n_free == eng.pool.n_pages - 1
+
+
+def test_healthy_flags_nan_inf_and_explosion():
+    import jax.numpy as jnp
+    rows = jnp.stack([
+        jnp.array([0.5, -1.0, 2.0]),           # fine
+        jnp.array([0.5, jnp.nan, 2.0]),        # NaN
+        jnp.array([0.5, jnp.inf, 2.0]),        # Inf
+        jnp.array([0.5, -1.0, 2e4]),           # exploded
+    ])
+    assert np.asarray(sentinels.healthy(rows)).tolist() == \
+        [True, False, False, False]
+
+
+# ---------------------------------------------------------------------------
+# warm-load golden probes + schedule re-validation (core/api.py)
+# ---------------------------------------------------------------------------
+
+GEMM_ARGS = (256, 256, 128, 128)
+
+
+def _gemm_record_path():
+    from repro.core.perf_model import V5E as _hw
+    key = ("gemm", *GEMM_ARGS, 1, "float32", _hw.name, 128, None, 0)
+    return schedule_cache.entry_path(key, _hw)
+
+
+def test_warm_load_probe_on_host_change(tmp_path):
+    tk = api.fuse_gemm_chain(*GEMM_ARGS)
+    path = _gemm_record_path()
+    rec = json.loads(path.read_text())
+    assert rec["host"] == schedule_cache.host_fingerprint()
+    rec["host"] = "0" * 16             # pretend it tuned elsewhere
+    path.write_text(json.dumps(rec))
+    api.clear_cache()
+    with sentinels.shadowing(0.0) as spec:
+        warm = api.fuse_gemm_chain(*GEMM_ARGS)
+    assert warm.source == "disk"       # probe passed, entry trusted
+    assert spec.n_probed == 1 and spec.n_probe_mismatched == 0
+    assert tk.report.best.key() == warm.report.best.key()
+    # the record was re-stamped: the next load on this host skips the
+    # probe entirely
+    assert json.loads(path.read_text())["host"] == \
+        schedule_cache.host_fingerprint()
+    api.clear_cache()
+    with sentinels.shadowing(0.0) as spec2:
+        again = api.fuse_gemm_chain(*GEMM_ARGS)
+    assert again.source == "disk" and spec2.n_probed == 0
+
+
+def test_warm_load_probe_mismatch_quarantines_and_retunes(tmp_path):
+    api.fuse_gemm_chain(*GEMM_ARGS)
+    path = _gemm_record_path()
+    rec = json.loads(path.read_text())
+    rec["host"] = "0" * 16
+    path.write_text(json.dumps(rec))
+    api.clear_cache()
+    with sentinels.shadowing(0.0) as spec:
+        with faults.injected(
+                "wrong_answer",
+                trigger=lambda ctx: ctx.get("op") == "probe-gemm"):
+            warm = api.fuse_gemm_chain(*GEMM_ARGS)
+    assert spec.n_probed == 1 and spec.n_probe_mismatched == 1
+    assert warm.source == "search"     # entry distrusted -> retune
+    assert glob.glob(str(tmp_path / "*.corrupt"))  # evidence kept
+    # the retuned record replays clean (current host, no probe due)
+    api.clear_cache()
+    assert api.fuse_gemm_chain(*GEMM_ARGS).source == "disk"
+
+
+def test_warm_load_probe_not_due_without_sentinels(tmp_path):
+    """Host changes alone never block serving: with the sentinels
+    disarmed the warm load replays exactly as before this layer."""
+    api.fuse_gemm_chain(*GEMM_ARGS)
+    path = _gemm_record_path()
+    rec = json.loads(path.read_text())
+    rec["host"] = "0" * 16
+    path.write_text(json.dumps(rec))
+    api.clear_cache()
+    warm = api.fuse_gemm_chain(*GEMM_ARGS)
+    assert warm.source == "disk"
+    assert json.loads(path.read_text())["host"] == "0" * 16
+
+
+def test_warm_load_revalidates_pruning_rules(tmp_path):
+    """A parseable record whose schedule violates Rule 3 (mangled tile
+    consistent across tile_sizes and params, so the kwargs cross-check
+    passes) is quarantined and retuned — never dispatched."""
+    api.fuse_gemm_chain(*GEMM_ARGS)
+    path = _gemm_record_path()
+    rec = json.loads(path.read_text())
+    rec["tile_sizes"]["m"] = 96        # 256/96: 12.5% padding waste
+    rec["params"]["bm"] = 96
+    path.write_text(json.dumps(rec))
+    api.clear_cache()
+    warm = api.fuse_gemm_chain(*GEMM_ARGS)
+    assert warm.source == "search"
+    assert glob.glob(str(tmp_path / "*.corrupt"))
+    api.clear_cache()
+    assert api.fuse_gemm_chain(*GEMM_ARGS).source == "disk"
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: wrong_answer (silent corruption) end to end
+# ---------------------------------------------------------------------------
+
+def _decode_plan_key():
+    return planner.plan_key(CFG, 3, 1, False, phase="decode", paged=4,
+                            kv_len=32)
+
+
+def test_chaos_wrong_answer_golden_probe_blocks_before_traffic():
+    """Corruption armed on every sentinel seam: the construction probe
+    catches it before the first request, the decode plan is
+    quarantined on disk, every served token comes from the twin
+    (bit-identical), and the relaunch replays clean at tier
+    ``configured`` with zero demotions."""
+    out = chaos.run_chaos("wrong_answer", {"rate": 1.0}, planner=True,
+                          sentinel_rate=1.0)
+    assert out.fired >= 1
+    assert out.tokens_identical
+    f, r = out.faulted_stats, out.relaunch_stats
+    assert f["golden_probes"] == 1 and f["golden_mismatches"] == 1
+    assert f["exec_tier"] == "xla-twin" and f["tier_demotions"] == 1
+    from repro.core.perf_model import V5E as _hw
+    assert schedule_cache.is_quarantined(_decode_plan_key(), _hw) \
+        is not None
+    assert r["exec_tier"] == "configured"
+    assert r["tier_demotions"] == 0 and r["golden_mismatches"] == 0
+
+
+def test_chaos_wrong_answer_shadow_detects_mid_traffic():
+    """Corruption restricted to live decode dispatches (the golden
+    probe's canned input stays clean): the shadow sampler detects on
+    the first corrupted decode, the detecting call already serves the
+    twin's output, and tokens stay bit-identical throughout."""
+    out = chaos.run_chaos(
+        "wrong_answer",
+        {"trigger": lambda ctx: ctx.get("op") == "engine-decode"},
+        planner=True, sentinel_rate=1.0)
+    assert out.fired >= 1
+    assert out.tokens_identical
+    f, r = out.faulted_stats, out.relaunch_stats
+    assert f["golden_mismatches"] == 0      # probe input was clean
+    assert f["shadow_mismatches"] == 1      # first decode detected
+    assert f["exec_tier"] == "xla-twin" and f["tier_demotions"] == 1
+    from repro.core.perf_model import V5E as _hw
+    assert schedule_cache.is_quarantined(_decode_plan_key(), _hw) \
+        is not None
+    assert r["exec_tier"] == "configured"
+    assert r["tier_demotions"] == 0 and r["shadow_mismatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# PR 8 leftovers: watchdog under a slow step, quarantine round-trip
+# ---------------------------------------------------------------------------
+
+def test_watchdog_counts_slow_injected_step(_model):
+    """A deliberately slow (not failing) injected step breaches the
+    watchdog budget without killing the request."""
+    model, params = _model
+    eng = ServingEngine(model, params, watchdog_s=0.01, **ENG_KW)
+    eng.submit(np.arange(4, dtype=np.int32) % CFG.vocab, 2)
+    with faults.injected(
+            "engine_step",
+            trigger=lambda ctx: time.sleep(0.05) or False):
+        eng.step()
+    assert eng.watchdog.breaches >= 1
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+    assert eng.finished[0].outcome == "complete"
+    assert eng.stats["tier_demotions"] == 0   # slow is not broken
+
+
+def test_clear_quarantine_reenables_decode_preplan(_model):
+    """Operator round-trip: quarantining the decode plan fingerprint
+    makes engine construction skip the pre-carve; clear_quarantine +
+    a breaker reset restores it on the next relaunch."""
+    _, params = _model
+    from repro.core.perf_model import V5E as _hw
+    planned = LM(CFG, Runtime(planner=True, stitch=False))
+    dkey = planner.plan_key(CFG, 2, 1, False, phase="decode", paged=4,
+                            kv_len=16)
+    breaker.record_failure(dkey, reason="operator test")
+    ServingEngine(planned, params, **ENG_KW)
+    assert all(k[8] != "decode" for k in planner._PLAN_MEMO)
+    assert schedule_cache.clear_quarantine(dkey, _hw)
+    breaker.reset()                    # relaunch: fresh memoization
+    planner.clear_memo()
+    ServingEngine(planned, params, **ENG_KW)
+    assert any(k[8] == "decode" for k in planner._PLAN_MEMO)

@@ -572,3 +572,69 @@ def test_paged_ring_execution_8dev():
     assert out["counts"] == [3, 8, 5, 2]
     assert out["pool_clean"]
     assert out["regime"] in ("paged-spatial", "paged-ring")
+
+
+# ---------------------------------------------------------------------------
+# contiguous-cache guard + sliding-window page reclamation
+# ---------------------------------------------------------------------------
+
+def test_run_planned_layer_rejects_contiguous_cache():
+    """Planner-executed decode is paged-only: a contiguous (ring) cache
+    reaching run_planned_layer must fail loudly with the remediation
+    (Runtime(planner=False)) — not silently read the wrong kv layout."""
+    from repro.models import layers as L
+    x = jnp.zeros((1, 1, CFG.d_model), jnp.float32)
+    rt = Runtime()
+    with pytest.raises(NotImplementedError, match="planner=False"):
+        L.run_planned_layer(object(), {"mix": {}, "ff": {}}, x, CFG,
+                            rt.rules, positions=jnp.zeros((1, 1), jnp.int32),
+                            rt=rt, cache={"k": None})
+
+
+def test_planner_runtime_contiguous_decode_falls_back(_plan_cache):
+    """Runtime(planner=True) serving a CONTIGUOUS cache (the reference
+    serving loop, no page table) transparently takes the hand-wired
+    path instead of tripping the paged-only planner executor — same
+    tokens as the plain model."""
+    hand = LM(CFG)
+    params = hand.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, CFG.vocab, size=int(rng.randint(3, 10)))
+             .astype(np.int32), int(g)) for g in (4, 7)]
+    want = _reference_serve(hand, params, reqs, 32)
+    got = _reference_serve(LM(CFG, Runtime(planner=True)), params,
+                           reqs, 32)
+    assert got == want
+
+
+def test_window_reclamation_transparent_and_counted():
+    """Sliding-window page reclamation (kv_pages.reclaim_below wired
+    into the engine step): pages wholly below the attention window go
+    back to the pool mid-request, the RECLAIMED placeholder keeps
+    logical indexing intact, and the served tokens are bit-identical
+    to the same engine with reclamation disabled — the window mask
+    already rejected every position those pages held."""
+    import dataclasses as _dc
+    cfg = _dc.replace(CFG, window=6)
+    model = LM(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    reqs = [(rng.randint(0, cfg.vocab, size=8).astype(np.int32), 10),
+            (rng.randint(0, cfg.vocab, size=5).astype(np.int32), 12)]
+    kw = dict(max_batch=2, page_size=4, n_pages=32, max_pages_per_seq=8,
+              choose_regime=False)
+
+    base_eng = ServingEngine(model, params, **kw)
+    base_eng._window = 0               # reclamation off, window mask on
+    base, base_stats = base_eng.run(list(reqs))
+    assert base_stats["reclaimed_pages"] == 0
+
+    eng = ServingEngine(model, params, **kw)
+    res, stats = eng.run(list(reqs))
+    assert stats["reclaimed_pages"] > 0
+    assert [r.tokens for r in res] == [r.tokens for r in base]
+    assert [len(r.tokens) for r in res] == [10, 12]
+    # reclaimed pages really returned: accounting balances at the end
+    assert eng.pool.n_free == eng.pool.n_pages - 1
+    # the occupancy telemetry is honest about the smaller footprint
+    assert stats["page_slot_steps"] < base_stats["page_slot_steps"]
