@@ -12,9 +12,11 @@ Beyond the paper's table, the long-context section records the
 **regime crossover** (docs/design.md §7): shapes whose kv sequence
 outgrows what batch x heads sharding can cover on an 8-way mesh, where
 ``api.fuse_attention_regimes`` should cross over from the spatial to
-the ring (kv-sharded, partial-softmax combine) regime.  Rows are
-regime-labelled and land in BENCH_kernels.json so the committed
-trajectory records where the crossover sits.
+a ring (kv-sharded, partial-softmax combine) regime — serial psum or
+the pipelined per-hop ppermute variant, whichever eq (2') prices
+cheaper per shape.  Rows are regime-labelled and land in
+BENCH_kernels.json so the committed trajectory records where the
+crossover sits.
 """
 import time
 
@@ -34,9 +36,9 @@ from .workloads import (ATTENTION, RING_ATTENTION, RING_MESH_AXIS,
 
 
 def regime_rows() -> list[dict]:
-    """Spatial-vs-ring regime search per long-context workload on an
-    8-way model axis, via the exact decision path ``kernels.ops``
-    dispatches."""
+    """Spatial vs ring vs ring-pipelined regime search per
+    long-context workload on an 8-way model axis, via the exact
+    decision path ``kernels.ops`` dispatches."""
     mesh, rules = ring_sweep_setup()
     rows = []
     for name, (heads, m, n, k, h) in RING_ATTENTION.items():
@@ -52,7 +54,11 @@ def regime_rows() -> list[dict]:
             "regime": choice.regime,
             "us_spatial": choice.times["spatial"] * 1e6,
             "us_ring": choice.times["ring"] * 1e6,
+            "us_ring_pipe": choice.times["ring-pipelined"] * 1e6,
             "ring_speedup": choice.times["spatial"] / choice.times["ring"],
+            # how much the per-hop overlap buys over the serial combine
+            "pipe_vs_serial": (choice.times["ring"]
+                               / choice.times["ring-pipelined"]),
             # per-device HBM traffic of each regime's tuned schedule
             # (model t_mem; the ring one is the shard-local chain)
             "hbm_bytes_spatial": t_mem(tks["spatial"].report.best, V5E)
@@ -124,12 +130,13 @@ def main():
               f"blocks=({r['bq']},{r['bkv']}) err={r['max_abs_err']:.2e}")
     reg = regime_rows()
     for r in reg:
-        print(f"attn_regime_{r['name']},"
-              f"{min(r['us_spatial'], r['us_ring']):.2f},"
+        best = min(r["us_spatial"], r["us_ring"], r["us_ring_pipe"])
+        print(f"attn_regime_{r['name']},{best:.2f},"
               f"regime={r['regime']} "
               f"spatial={r['us_spatial']:.2f}us "
               f"ring={r['us_ring']:.2f}us "
-              f"ring_speedup={r['ring_speedup']:.2f}x "
+              f"ring_pipe={r['us_ring_pipe']:.2f}us "
+              f"pipe_vs_serial={r['pipe_vs_serial']:.2f}x "
               f"hbm_ring/spatial="
               f"{r['hbm_bytes_ring'] / r['hbm_bytes_spatial']:.3f}")
     return rows + reg

@@ -16,6 +16,12 @@ reads the full ``n_ctx``-wide contiguous cache for every slot every
 step; the paged engine reads each active request's *allocated pages*
 (page-granular actual context) plus the page-table indirection.
 
+Alongside throughput, the continuous row reports inter-token latency:
+the engine records per-decode-step wall time, and the p50/p99 columns
+summarize the distribution a caller streaming tokens would see —
+throughput wins that come from batching are only free if the tail
+(p99) stays bounded.
+
 ``--smoke`` is the CI lane: asserts continuous beats fixed tokens/s,
 that paged bytes undercut contiguous bytes, and that the paged regime
 choice is served from the persistent schedule cache on a warm start.
@@ -59,6 +65,21 @@ def workload(vocab: int, n_groups: int, seed: int = 0):
     rng = np.random.RandomState(seed)
     return [(rng.randint(0, vocab, size=PROMPT_LEN).astype(np.int32), g)
             for _ in range(n_groups) for g in GROUP_GENS]
+
+
+def percentile(trace, q: float) -> float:
+    """Percentile with linear interpolation between closest ranks
+    (numpy's default), dependency-free so the serving row and its unit
+    test share one deterministic definition.  ``q`` is in [0, 100]."""
+    if not trace:
+        raise ValueError("percentile of an empty trace")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q={q} outside [0, 100]")
+    xs = sorted(trace)
+    pos = (len(xs) - 1) * q / 100.0
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
 
 def kv_row_bytes(cfg) -> int:
@@ -124,6 +145,7 @@ def run(n_groups: int, verbose: bool = False):
     assert ct_counts == fx_counts == [g for _, g in reqs]
 
     total = sum(ct_counts)
+    itl = stats["decode_step_wall_s"]
     fixed_bytes = fx_steps * BATCH * n_ctx * row_b
     # per (step, active slot): pages held, priced exactly as the
     # tuner's paged_gather_bytes — 2x (page read + staging write) the
@@ -137,6 +159,8 @@ def run(n_groups: int, verbose: bool = False):
         "tokens": total,
         "tok_s_fixed": total / fx_s,
         "tok_s_continuous": stats["tok_per_s"],
+        "itl_p50_ms": percentile(itl, 50.0) * 1e3,
+        "itl_p99_ms": percentile(itl, 99.0) * 1e3,
         "speedup": stats["tok_per_s"] / (total / fx_s),
         "decode_steps_fixed": fx_steps,
         "decode_steps_continuous": stats["decode_steps"],
@@ -219,6 +243,8 @@ def main():
           f"tok_s_fixed={r['tok_s_fixed']:.1f} "
           f"tok_s_continuous={r['tok_s_continuous']:.1f} "
           f"speedup={r['speedup']:.2f} "
+          f"itl_p50_ms={r['itl_p50_ms']:.2f} "
+          f"itl_p99_ms={r['itl_p99_ms']:.2f} "
           f"steps_fixed={r['decode_steps_fixed']} "
           f"steps_cont={r['decode_steps_continuous']} "
           f"hbm_mb_fixed={r['hbm_mb_fixed']:.2f} "

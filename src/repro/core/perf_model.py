@@ -31,13 +31,14 @@ from dataclasses import dataclass
 
 from .chain import Chain, DTYPE_BYTES
 from .dag import Schedule
-from .ring import ring_traffic_bytes
+from .ring import (ICI_HOP_LATENCY_S, pipelined_overlap_seconds,
+                   ring_traffic_bytes)
 
 # Bump whenever the analytical model's *output* can change for a fixed
 # (chain, tile assignment, mesh) — new terms, retuned constants, changed
 # hoisting semantics.  core.schedule_cache folds this into every disk
 # key, so persisted schedules from an older model never resurface.
-MODEL_VERSION = 3
+MODEL_VERSION = 4
 
 
 @dataclass(frozen=True)
@@ -76,12 +77,19 @@ class MeshSpec:
                 kernel, but it shrinks the local grid, which moves alpha
                 and therefore the best tile).
     ici_bw:     bytes/s per inter-chip link (ring model, v5e default).
+    pipelined:  price the cross-shard combine as the software-pipelined
+                ring (per-hop collective-permutes overlapped with tile
+                compute, ``t_coll_pipelined``) instead of the serial
+                blocking all-reduce (``t_coll``).  Localization is
+                identical; only the collective term — and therefore the
+                regime ranking and the schedule-cache key — differs.
     """
 
     axes: tuple[tuple[str, int], ...] = ()
     placement: tuple[tuple[str, str], ...] = ()
     batch_axes: tuple[str, ...] = ()
     ici_bw: float = V5E.ici_bw
+    pipelined: bool = False
 
     @classmethod
     def single(cls) -> "MeshSpec":
@@ -133,7 +141,7 @@ class MeshSpec:
         return (tuple(sorted((l, self.axis_size(a))
                              for l, a in self.placement
                              if self.axis_size(a) > 1)),
-                self.batch_factor(), self.ici_bw)
+                self.batch_factor(), self.ici_bw, self.pipelined)
 
     def localize(self, chain: Chain) -> Chain:
         """The per-shard sub-problem: every placed loop's extent divided
@@ -195,6 +203,100 @@ def collective_bytes(chain: Chain, mesh: MeshSpec) -> float:
 def t_coll(sched: Schedule, mesh: MeshSpec) -> float:
     """Collective seconds for the local schedule under ``mesh``."""
     return collective_bytes(sched.chain, mesh) / mesh.ici_bw
+
+
+def _pipelined_ring_terms(chain: Chain, mesh: MeshSpec):
+    """Per (placed reduction loop, reduced output) wire quantities of
+    the pipelined ring combine — shared by the bytes accounting and the
+    seconds model so the HLO assert and eq (2') can never drift.
+
+    Yields ``(n, out_bytes, rows, softmax)`` where ``out_bytes`` is the
+    shard-local combined output and ``rows`` its leading-dim row count
+    (one f32 max + one f32 sum statistic per row when ``softmax``)."""
+    for loop, axis in mesh.placement:
+        n = mesh.axis_size(axis)
+        if n <= 1:
+            continue
+        outs = _reduced_outputs(chain, loop)
+        softmax = any(op.epilogue == "online_softmax"
+                      and (loop in op.reduce_dims
+                           or loop in chain.tensors[op.out].dims)
+                      for op in chain.ops)
+        for name in outs:
+            t = chain.tensors[name]
+            nbytes = (math.prod(chain.loops[d] for d in t.dims)
+                      * t.dtype_bytes * chain.batch)
+            rows = chain.batch * math.prod(
+                chain.loops[d] for d in t.dims[:-1])
+            yield n, nbytes, rows, softmax
+
+
+def pipelined_collective_bytes(chain: Chain, mesh: MeshSpec) -> float:
+    """Per-device wire bytes of the *pipelined* ring combine
+    (docs/tuning.md): the serial all-reduce decomposed into per-hop
+    ``collective-permute``s a compiler can overlap with tile compute.
+
+    Per reduced output over an ``n``-way ring: a balanced ring
+    reduce-scatter moves the chunked partial state — the output plus,
+    under an online-softmax producer, the f32 running-sum statistic —
+    over ``n - 1`` hops of ``1/n`` each, the owner finalizes its chunk,
+    and a ring all-gather broadcasts the finished chunks over another
+    ``n - 1`` hops.  The running max still needs one global ``pmax``
+    (all-reduce) before any rescale can happen, exactly as the serial
+    combine.  These are the collectives ``dist.ring_dispatch`` executes
+    with ``pipelined=True``; the wire-level harness asserts the parsed
+    HLO matches this figure byte-for-byte."""
+    total = 0.0
+    for n, nbytes, rows, softmax in _pipelined_ring_terms(chain, mesh):
+        # reduce-scatter hops: output chunks (+ f32 sum-stat chunks)
+        total += (n - 1) * ring_traffic_bytes(
+            "collective-permute", nbytes / n, n)
+        if softmax:
+            total += (n - 1) * ring_traffic_bytes(
+                "collective-permute", 4.0 * rows / n, n)
+            # the global running max cannot ride the ring — every
+            # shard's rescale needs it up front
+            total += ring_traffic_bytes("all-reduce", 4.0 * rows, n)
+        # all-gather hops: finalized output chunks
+        total += (n - 1) * ring_traffic_bytes(
+            "collective-permute", nbytes / n, n)
+    return total
+
+
+def t_coll_pipelined(chain: Chain, mesh: MeshSpec, tile_s: float) -> float:
+    """Additive collective seconds of the pipelined ring combine — the
+    eq (2') term that replaces ``t_coll`` when ``mesh.pipelined``.
+
+    ``tile_s`` is the shard's full tile time; chunked ``n`` ways it
+    yields ``hop_compute = tile_s / n`` per reduce-scatter hop, so the
+    steady state costs ``pipelined_overlap_seconds`` (``max(hop_compute,
+    hop_wire) * (n - 1)``, core.ring).  Relative to the serial model —
+    which already charges ``tile_s`` in the tile terms — the *extra*
+    seconds are::
+
+        (n-1) * (max(hc, hw_rs) - hc)     exposed RS wire (0 when
+                                          compute hides every hop)
+      + (n-1) * hw_ag                     all-gather drain (no compute
+                                          left to hide behind)
+      + t_pmax                            global-max all-reduce
+      + 2 * (n-1) * ICI_HOP_LATENCY_S     per-hop launch tax
+
+    The hop tax is what the serial combine avoids (one fused
+    all-reduce), so wire-dominated short shapes still price serial
+    cheaper — the crossover the regime search exploits."""
+    total = 0.0
+    for n, nbytes, rows, softmax in _pipelined_ring_terms(chain, mesh):
+        hc = tile_s / n
+        state = nbytes + (4.0 * rows if softmax else 0.0)
+        hw_rs = state / n / mesh.ici_bw
+        hw_ag = nbytes / n / mesh.ici_bw
+        total += (pipelined_overlap_seconds(hc, hw_rs, n) - (n - 1) * hc
+                  + (n - 1) * hw_ag
+                  + 2 * (n - 1) * ICI_HOP_LATENCY_S)
+        if softmax:
+            total += ring_traffic_bytes("all-reduce", 4.0 * rows,
+                                        n) / mesh.ici_bw
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +392,8 @@ def estimate(sched: Schedule, hw: TpuSpec = V5E,
     """
     t = (t_mem(sched, hw) + t_comp(sched, hw)) * alpha(sched, hw)
     if mesh is not None and not mesh.is_single:
-        t += t_coll(sched, mesh)
+        t += (t_coll_pipelined(sched.chain, mesh, t) if mesh.pipelined
+              else t_coll(sched, mesh))
     return t
 
 

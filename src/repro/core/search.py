@@ -22,7 +22,7 @@ from typing import Callable, Optional, Sequence
 from .chain import Chain
 from .dag import Schedule, build_schedule
 from .perf_model import (MeshSpec, TpuSpec, V5E, collective_bytes, estimate,
-                         vmem_estimate)
+                         t_coll_pipelined, vmem_estimate)
 from .pruning import (CandidateMatrix, PruneStats, generate_candidates,
                       generate_candidates_batch, rule3_padding_ok)
 from .tiling import candidate_tile_sizes
@@ -53,7 +53,9 @@ def rank_regimes(reports: dict[str, "SearchReport"]) -> list[str]:
     per-shard tile time plus whatever each regime pays on the wire.
     ``sorted`` is stable, so ties break to the caller's insertion
     order; callers list the collective-free regime first to make the
-    tie-break conservative.
+    tie-break conservative, then the serial combine before its
+    pipelined variant (``ring`` before ``ring-pipelined``) so equal
+    pricing keeps the single-collective dispatch.
     """
     return sorted(reports, key=lambda name: reports[name].best_time)
 
@@ -115,12 +117,23 @@ def heuristic_search(chain: Chain,
     """
     if engine not in ("batch", "scalar"):
         raise ValueError(f"unknown search engine {engine!r}")
-    coll_s = 0.0
+    # The collective term stays OUT of the intra-regime dynamics (see
+    # above); ``coll_of(tile_s)`` prices it at return time.  Serial is
+    # tile-independent (a constant); the pipelined ring's overlap term
+    # needs the winning tile time (hop_compute = tile_s / n), so it is
+    # a function of the best time rather than a precomputed constant.
+    coll_of = lambda tile_s: 0.0  # noqa: E731
     if mesh is not None:
         chain = mesh.localize(chain)
-        coll_s = collective_bytes(chain, mesh) / mesh.ici_bw
+        if mesh.pipelined:
+            local = chain
+            coll_of = lambda tile_s: t_coll_pipelined(  # noqa: E731
+                local, mesh, tile_s)
+        else:
+            coll_s = collective_bytes(chain, mesh) / mesh.ici_bw
+            coll_of = lambda tile_s: coll_s  # noqa: E731
     if engine == "batch":
-        return _search_batch(chain, measure_fn, hw, mesh, coll_s,
+        return _search_batch(chain, measure_fn, hw, mesh, coll_of,
                              population_size, topk, epsilon,
                              max_iterations, unit, seed)
     rng = random.Random(seed)
@@ -182,11 +195,12 @@ def heuristic_search(chain: Chain,
         population = nxt
 
     assert best is not None
-    return SearchReport(best=best, best_time=best_t + coll_s,
+    return SearchReport(best=best, best_time=best_t + coll_of(best_t),
                         n_measured=n_measured,
                         n_iterations=it + 1, n_candidates=stats.n_kept,
                         prune_stats=stats.as_dict(),
-                        history=[(i, t + coll_s) for i, t in history],
+                        history=[(i, t + coll_of(t))
+                                 for i, t in history],
                         mesh=mesh)
 
 
@@ -227,7 +241,8 @@ def _mutate_batch(cand: tuple[int, int], cm: CandidateMatrix,
 
 
 def _search_batch(chain: Chain, measure_fn: Optional[MeasureFn],
-                  hw: TpuSpec, mesh: Optional[MeshSpec], coll_s: float,
+                  hw: TpuSpec, mesh: Optional[MeshSpec],
+                  coll_of: Callable[[float], float],
                   population_size: int, topk: int, epsilon: float,
                   max_iterations: int, unit: int,
                   seed: int) -> SearchReport:
@@ -317,9 +332,10 @@ def _search_batch(chain: Chain, measure_fn: Optional[MeasureFn],
 
     assert best is not None
     best_sched = materialized.get(cm.key(best)) or cm.materialize(best)
-    return SearchReport(best=best_sched, best_time=best_t + coll_s,
+    return SearchReport(best=best_sched, best_time=best_t + coll_of(best_t),
                         n_measured=n_measured,
                         n_iterations=it + 1, n_candidates=stats.n_kept,
                         prune_stats=stats.as_dict(),
-                        history=[(i, t + coll_s) for i, t in history],
+                        history=[(i, t + coll_of(t))
+                                 for i, t in history],
                         mesh=mesh)

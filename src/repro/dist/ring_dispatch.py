@@ -18,10 +18,30 @@ shard-local output (``num``) plus all-reduces of the two f32 per-row
 statistics (``pmax`` of the max, ``psum`` of the rescaled sum) — both
 sides evaluate ``core.ring.ring_traffic_bytes`` on the same buffers,
 asserted against the compiled HLO in ``tests/test_ring_attention.py``.
+
+``pipelined=True`` (this PR) replaces the blocking all-reduces with the
+software-pipelined ring the tuner prices under
+``MeshSpec(pipelined=True)``: after the global ``pmax`` (which no
+rescale can precede), the rescaled ``(num, den)`` partials are chunked
+``n`` ways over their rows and combined by a balanced ring
+reduce-scatter — ``n - 1`` ``jax.lax.ppermute`` hops, each merging the
+arriving accumulator with the local chunk while the next hop's chunk
+is independent and free to overlap — then the owner finalizes its
+chunk and a ring all-gather broadcasts the finished chunks back
+(``n - 1`` more hops).  Executed wire: ``2(n-1)`` (+ ``n - 1`` for the
+f32 sum statistic) collective-permutes of one chunk each — exactly
+``core.perf_model.pipelined_collective_bytes``, asserted against the
+compiled HLO like the serial combine.  Semantics are identical up to
+f32 summation order: each ring chunk folds the same rescaled addends
+as the serial ``psum`` but starting from a rotated shard, so outputs
+agree to a few ulps (and bit-exactly across devices — the all-gather
+replicates one owner's bits).  ``combine_partials`` is the
+order-canonical host-level spec of the combine both paths implement.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import jax
@@ -87,6 +107,86 @@ def finalize_partials(o, l, dtype) -> jax.Array:
     return (o / l).astype(dtype)
 
 
+def combine_partials(parts, dtype):
+    """Order-canonical combine of per-shard partial states — the exact
+    arithmetic of the executed pmax/psum combine, as a pure function.
+
+    ``parts``: iterable of ``(shard_index, (o_unnorm, m, l))`` in ANY
+    arrival order (a ring delivers partials in a rotation; a failure
+    retry might permute them arbitrarily).  The result is
+    bit-identical for every arrival order by construction: the global
+    max is an exact, order-free reduction; each shard is rescaled once
+    against it (the same single-rescale the dispatch performs — NOT the
+    iterative ``merge_partials`` fold, whose per-step rescales compose
+    ``exp`` in a different association); and the rescaled addends are
+    summed left-to-right in shard-index order — the association XLA's
+    ``psum`` uses (device-order linear reduction), which is what makes
+    this twin bitwise-comparable to the executed serial combine.
+    ``dtype`` is the wire dtype the numerator is cast to before
+    summing, matching ``ring_attention``'s ``num``."""
+    parts = [p for _, p in sorted(parts, key=lambda sp: sp[0])]
+    if not parts:
+        raise ValueError("combine_partials needs at least one shard")
+    m_glob = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_glob = jnp.maximum(m_glob, m)
+    num = den = None
+    for o, m, l in parts:
+        corr = jnp.exp(m - m_glob)
+        ni = (o * corr).astype(dtype)
+        di = l * corr
+        num = ni if num is None else num + ni
+        den = di if den is None else den + di
+    return finalize_partials(num.astype(jnp.float32), den, dtype)
+
+
+def _ring_combine_pipelined(num, den, axis, n_shards, out_dtype):
+    """The pipelined combine body (module doc): balanced ring
+    reduce-scatter of the rescaled ``(num, den)`` partials, owner-side
+    finalize, ring all-gather of the finished chunks.
+
+    ``num``: (..., Dv) at the wire dtype, ``den``: (...) f32 — both
+    already rescaled by ``exp(m_local - m_glob)``.  Rows (the flattened
+    leading dims) must divide ``n_shards``; regime planners gate on
+    this.  Chunk ``c``'s accumulator starts at shard ``c+1`` and folds
+    left-associatively around the ring — same addends as the serial
+    ``psum``, rotated association — and every device returns the same
+    bits (the all-gather replicates the owner's finalized chunk)."""
+    n = n_shards
+    lead, dv = num.shape[:-1], num.shape[-1]
+    rows = math.prod(lead)
+    assert rows % n == 0, (lead, n)
+    c = rows // n
+    x = num.reshape(n, c, dv)
+    y = den.reshape(n, c)
+    d = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    idx0 = jnp.mod(d - 1, n)
+    acc_n = jax.lax.dynamic_index_in_dim(x, idx0, 0, keepdims=False)
+    acc_d = jax.lax.dynamic_index_in_dim(y, idx0, 0, keepdims=False)
+    for t in range(n - 1):
+        # arriving partial chunk merges with the local contribution;
+        # the chunk needed at hop t+1 is independent of this hop's
+        # wire, which is the overlap eq (2') prices
+        acc_n = jax.lax.ppermute(acc_n, axis, perm)
+        acc_d = jax.lax.ppermute(acc_d, axis, perm)
+        idx = jnp.mod(d - 2 - t, n)
+        acc_n = acc_n + jax.lax.dynamic_index_in_dim(x, idx, 0,
+                                                     keepdims=False)
+        acc_d = acc_d + jax.lax.dynamic_index_in_dim(y, idx, 0,
+                                                     keepdims=False)
+    own = finalize_partials(acc_n.astype(jnp.float32),
+                            acc_d[..., None], out_dtype)
+    out = jnp.zeros((n, c, dv), out_dtype)
+    out = jax.lax.dynamic_update_index_in_dim(out, own, d, 0)
+    cur = own
+    for t in range(n - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        idx = jnp.mod(d - 1 - t, n)
+        out = jax.lax.dynamic_update_index_in_dim(out, cur, idx, 0)
+    return out.reshape(*lead, dv)
+
+
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
@@ -97,6 +197,7 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    causal: bool = False, window: int = 0,
                    scale: Optional[float] = None,
                    bq: int = 128, bkv: int = 128,
+                   pipelined: bool = False,
                    interpret: bool = False) -> jax.Array:
     """softmax(QK^T)V with kv sharded along ``axis``; output replicated
     over that axis (sharded over ``batch_axes`` like the inputs).
@@ -110,6 +211,14 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (decode-compatible, as in ``fused_attention``); each shard masks
     against global positions, so causal/window boundaries falling
     inside a shard are exact.
+
+    ``pipelined`` swaps the blocking psum combine for the per-hop
+    ppermute ring (``_ring_combine_pipelined``, module doc); the local
+    partial compute and the global ``pmax`` are shared verbatim, so the
+    pipelined output differs from serial only by the f32 summation
+    rotation — within a few ulps, and identical across devices.
+    Callers gate on ``B * Hq * M`` divisible by the axis size (the
+    regime planner only offers ``ring-pipelined`` when it is).
     """
     from ..kernels.attention import fused_attention_partial
 
@@ -138,8 +247,13 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         corr = jnp.exp(mm - m_glob)
         # numerator rides the wire at the output dtype — the bytes the
         # model prices (all-reduce of the localized chain's O tensor)
-        num = jax.lax.psum((o * corr[..., None]).astype(ql.dtype), axis)
-        den = jax.lax.psum(ll * corr, axis)
+        num_loc = (o * corr[..., None]).astype(ql.dtype)
+        den_loc = ll * corr
+        if pipelined:
+            return _ring_combine_pipelined(num_loc, den_loc, axis,
+                                           n_shards, ql.dtype)
+        num = jax.lax.psum(num_loc, axis)
+        den = jax.lax.psum(den_loc, axis)
         return finalize_partials(num, den[..., None], ql.dtype)
 
     return _compat.shard_map(
@@ -150,7 +264,8 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def paged_ring_decode_attention(q, k_pages, v_pages, page_table,
                                 positions, *, window: int, scale: float,
                                 rules: Rules, mesh: jax.sharding.Mesh,
-                                batch_axes=None):
+                                batch_axes=None,
+                                pipelined: bool = False):
     """Paged decode attention with the page-table COLUMNS (logical
     pages — the kv reduction axis at page granularity) sharded over the
     tp-or-model axis (docs/serving.md).
@@ -168,6 +283,13 @@ def paged_ring_decode_attention(q, k_pages, v_pages, page_table,
     ``models.layers.distributed_decode_attention`` and ``ring_attention``
     — the exact buffers ``core.perf_model.collective_bytes`` prices for
     the paged-ring regime.
+
+    ``pipelined`` runs the per-hop ppermute combine instead (module
+    doc; the paged-ring-pipelined regime).  The rescaled numerator is
+    cast to the query dtype before riding the ring — the wire bytes the
+    model prices — so bf16 configs trade one cast for overlapped hops
+    (f32 configs are unaffected: the cast is the identity).  Callers
+    gate on ``B * Hq`` rows divisible by the axis size.
     """
     axis = rules.model
     n_shards = mesh.shape[axis]
@@ -206,11 +328,17 @@ def paged_ring_decode_attention(q, k_pages, v_pages, page_table,
         m_loc = jnp.max(s, axis=-1, keepdims=True)
         m_glob = jax.lax.pmax(m_loc, axis)
         p = jnp.exp(s - m_glob)
-        l = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axis)
-        acc = jax.lax.psum(
-            jnp.einsum("bhmn,bhnv->bhmv", p.astype(vv.dtype), vv,
-                       preferred_element_type=jnp.float32), axis)
-        o = finalize_partials(acc, l, qb.dtype)
+        l_loc = jnp.sum(p, axis=-1, keepdims=True)
+        acc_loc = jnp.einsum("bhmn,bhnv->bhmv", p.astype(vv.dtype), vv,
+                             preferred_element_type=jnp.float32)
+        if pipelined:
+            o = _ring_combine_pipelined(
+                acc_loc.astype(qb.dtype), l_loc[..., 0], axis,
+                n_shards, qb.dtype)
+        else:
+            l = jax.lax.psum(l_loc, axis)
+            acc = jax.lax.psum(acc_loc, axis)
+            o = finalize_partials(acc, l, qb.dtype)
         return o.reshape(bl, hq, m, vv.shape[-1])
 
     return _compat.shard_map(

@@ -17,6 +17,7 @@ evenly stay replicated rather than failing.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -212,10 +213,14 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
     * ring — kv sequence sharded over tp-or-model, per-shard
       partial-softmax kernel + log-sum-exp combine
       (``dist.ring_dispatch``); pays the combine's all-reduce.
+    * ring-pipelined — same sharding, but the combine runs as per-hop
+      ``ppermute`` reduce-scatter + all-gather overlapped with tile
+      compute (``MeshSpec(pipelined=True)``, eq 2' overlap term).
 
-    The tuner prices both under their ``MeshSpec`` (eq 2') and the
-    cheaper one is dispatched — for long kv contexts that a shard's
-    batch/head slice cannot cover, that is the ring regime.
+    The tuner prices all candidates under their ``MeshSpec`` (eq 2')
+    and the cheapest is dispatched — for long kv contexts that a
+    shard's batch/head slice cannot cover, that is one of the ring
+    regimes (pipelined once compute is deep enough to hide the hops).
     """
     m = _backend_mode(mode)
     b, hq, M, D = q.shape
@@ -236,12 +241,14 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
                 dtype=str(q.dtype), causal=causal, window=window,
                 scale=scale, interpret=interp,
                 spatial=(spec, baxes, hax))
-        if choice is not None and choice.regime == "ring":
+        if choice is not None and choice.regime in ("ring",
+                                                    "ring-pipelined"):
             p = choice.kernel.params
             return ring_dispatch.ring_attention(
                 q, k, v, mesh=mesh, axis=plan.axis,
                 batch_axes=plan.batch_axes, causal=causal,
                 window=window, scale=scale, bq=p.bq, bkv=p.bkv,
+                pipelined=(choice.regime == "ring-pipelined"),
                 interpret=interp)
         if baxes or hax:
             body = _attn_body(M, N, D, Dv, hq, b, str(q.dtype), causal,
@@ -271,6 +278,19 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array,
         _kernel,
         lambda: ref.gqa_attention_ref(q, k, v, causal=causal,
                                       window=window, scale=scale))
+
+
+def _pipelined_rows_ok(plan, batch: int, q_heads: int, q_len: int) -> bool:
+    """Whether the pipelined ring combine can run for this shape: the
+    balanced reduce-scatter chunks the per-shard output rows
+    ``(batch / batch_factor) * q_heads * q_len`` evenly across the ring
+    — a row count the axis cannot divide stays serial rather than
+    padding the wire."""
+    n = plan.n_shards
+    bf = plan.spec.batch_factor()
+    if n < 2 or batch % bf:
+        return False
+    return (batch // bf) * q_heads * q_len % n == 0
 
 
 def attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh, *,
@@ -309,6 +329,9 @@ def attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh, *,
         return None, None
     regimes = {"spatial": spec if (baxes or hax) else None,
                "ring": plan.spec}
+    if _pipelined_rows_ok(plan, batch, q_heads, q_len):
+        regimes["ring-pipelined"] = dataclasses.replace(
+            plan.spec, pipelined=True)
     choice = api.fuse_attention_regimes(
         q_len, kv_len, head_dim, v_dim, heads=q_heads, batch=batch,
         dtype=dtype, causal=causal, window=window, scale=scale,
@@ -343,8 +366,11 @@ def paged_attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh,
       granularity — the dispatcher shards whole table columns, so a
       page count the axis cannot divide must not be priced as ring
       (the execution would silently fall back to the full gather).
+    * paged-ring-pipelined — paged-ring with the per-hop ppermute
+      combine (``MeshSpec(pipelined=True)``); offered when the decode
+      rows also chunk evenly across the ring.
 
-    Both are tuned through ``api.fuse_attention_paged`` so the ranking
+    All candidates are tuned through ``api.fuse_attention_paged`` so the ranking
     includes each regime's own localized paged-gather term and the
     outcomes persist under the paged cache fingerprint.
     """
@@ -361,6 +387,9 @@ def paged_attention_regime_choice(rules: Rules, mesh: jax.sharding.Mesh,
     regimes = {"paged-spatial": spec if (baxes or hax) else None}
     if plan is not None:
         regimes["paged-ring"] = plan.spec
+        if _pipelined_rows_ok(plan, batch, q_heads, q_len):
+            regimes["paged-ring-pipelined"] = dataclasses.replace(
+                plan.spec, pipelined=True)
     choice = api.fuse_attention_paged_regimes(
         q_len, kv_len, head_dim, v_dim, page_size=page_size,
         heads=q_heads, batch=batch, dtype=dtype, window=window,

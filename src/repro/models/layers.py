@@ -479,6 +479,7 @@ def paged_attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
                           window: Optional[int] = None,
                           mesh: Optional[jax.sharding.Mesh] = None,
                           dist_decode: bool = False,
+                          dist_pipelined: bool = False,
                           kernel_ops: bool = False,
                           block: Optional[tuple] = None
                           ) -> tuple[jax.Array, dict]:
@@ -534,6 +535,7 @@ def paged_attention_block(p: dict, x: jax.Array, cfg: ModelConfig,
                               group=group, win=win, scale=scale,
                               rules=rules, mesh=mesh,
                               dist_decode=dist_decode,
+                              dist_pipelined=dist_pipelined,
                               kernel_ops=kernel_ops, block=block)
 
     o = constrain(o, rules, "batch", "tp", None, None)
@@ -548,6 +550,7 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
                           rules: Rules,
                           mesh: Optional[jax.sharding.Mesh] = None,
                           dist_decode: bool = False,
+                          dist_pipelined: bool = False,
                           kernel_ops: bool = False,
                           block: Optional[tuple] = None) -> jax.Array:
     """The three-body paged attention core — ring regime, fused paged
@@ -586,7 +589,7 @@ def _paged_attention_body(qt: jax.Array, cache: dict,
         return paged_ring_decode_attention(
             qt, cache["k_pages"], cache["v_pages"], page_table,
             positions[:, 0], window=win, scale=scale, rules=rules,
-            mesh=mesh, batch_axes=baxes)
+            mesh=mesh, batch_axes=baxes, pipelined=dist_pipelined)
     if kernel_ops and s == 1 and jax.default_backend() == "tpu":
         # decode only: the kernel's tail convention needs q rows at
         # lengths-M..lengths-1, which padded prefill rows violate.
@@ -841,6 +844,7 @@ def run_planned_layer(lp, p: dict, x: jax.Array, cfg: ModelConfig,
                     q, cache, page_table, positions, group=group,
                     win=win, scale=scale, rules=rules, mesh=rt.mesh,
                     dist_decode=rt.dist_decode_attn,
+                    dist_pipelined=rt.dist_decode_pipelined,
                     kernel_ops=rt.kernel_ops, block=rt.paged_block)
             elif rt.kernel_ops and s > 1:
                 from ..kernels import ops as kernel_ops_mod

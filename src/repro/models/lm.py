@@ -44,6 +44,10 @@ class Runtime:
     dist_decode_attn: bool = False  # decode attention over a
     # seq-sharded KV cache via per-shard partial softmax (no cache
     # gather) — SS Perf hillclimb #1; enable for production serving.
+    dist_decode_pipelined: bool = False  # run the dist-decode combine
+    # as the per-hop ppermute ring (paged-ring-pipelined regime,
+    # docs/design.md §7) instead of the serial pmax/psum; serving
+    # threads the tuner's per-shape pick here.
     unroll: bool = False    # unroll all scans (dry-run cost accounting:
     # XLA HloCostAnalysis counts while bodies ONCE; trip-count-1 loops
     # restore correct flops/bytes in cost_analysis())
@@ -283,6 +287,7 @@ class LM:
                     p["mix"], h, cfg, rt.rules, positions=positions,
                     cache=cache, page_table=page_table, window=win,
                     mesh=rt.mesh, dist_decode=rt.dist_decode_attn,
+                    dist_pipelined=rt.dist_decode_pipelined,
                     kernel_ops=rt.kernel_ops, block=rt.paged_block)
             else:
                 mix, new_cache = L.attention_block(

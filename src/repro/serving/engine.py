@@ -24,9 +24,11 @@ recently allocated pages first, the standard vLLM-style policy.
 
 The regime the decode attention runs under is a tuner decision, as
 everywhere else in this repo: at construction the engine prices
-paged-spatial vs paged-ring for its decode shape
-(``kernels.ops.paged_attention_regime_choice``, persistent-cached) and
-enables the kv-sharded ring path only when the model ranks it fastest.
+paged-spatial vs paged-ring vs paged-ring-pipelined for its decode
+shape (``kernels.ops.paged_attention_regime_choice``,
+persistent-cached) and enables the kv-sharded ring path — with the
+per-hop ppermute combine when the pipelined variant wins — only when
+the model ranks it fastest.
 
 Degradation (docs/reliability.md): the engine never dies on a bad
 fused unit.  Execution runs through a **tiered fallback chain** —
@@ -176,21 +178,29 @@ class ServingEngine:
                       "shadow_mismatches": 0, "golden_probes": 0,
                       "golden_mismatches": 0, "health_evictions": 0,
                       "reclaimed_pages": 0}
+        # wall seconds of each decode step run() drove — the
+        # inter-token-latency trace bench_serving reduces to p50/p99
+        self.decode_step_wall_s: list[float] = []
         self.regime, self.regime_source, self.regime_times, tiles = \
             self._choose_regime(model) if choose_regime else \
             ("paged-spatial", None, {}, None)
         rt = model.rt
-        want_ring = self.regime == "paged-ring"
-        if (rt.dist_decode_attn != want_ring and rt.mesh is not None) \
+        want_ring = self.regime in ("paged-ring", "paged-ring-pipelined")
+        want_pipe = self.regime == "paged-ring-pipelined"
+        if ((rt.dist_decode_attn != want_ring
+             or rt.dist_decode_pipelined != want_pipe)
+                and rt.mesh is not None) \
                 or tiles != rt.paged_block:
             # the tuner's decision is authoritative in BOTH directions:
-            # enable the kv-sharded decode path when paged-ring wins,
-            # disable it when the collective-free regime does, and
-            # thread the winning (bq, bkv) tiles so the kernel path
+            # enable the kv-sharded decode path when a ring regime wins
+            # (and its pipelined ppermute combine when that variant
+            # wins), disable it when the collective-free regime does,
+            # and thread the winning (bq, bkv) tiles so the kernel path
             # executes the schedule the model priced.  The model is a
             # stateless wrapper — rebuilding is free.
             model = type(model)(model.cfg, dataclasses.replace(
                 rt, dist_decode_attn=want_ring and rt.mesh is not None,
+                dist_decode_pipelined=want_pipe and rt.mesh is not None,
                 paged_block=tiles))
         self.model = model
         self._window = int(model.cfg.window or 0)
@@ -234,7 +244,8 @@ class ServingEngine:
         rt = self.model.rt
         twin_rt = dataclasses.replace(rt, planner=False,
                                       kernel_ops=False,
-                                      dist_decode_attn=False)
+                                      dist_decode_attn=False,
+                                      dist_decode_pipelined=False)
         return type(self.model)(self.model.cfg, twin_rt)
 
     def _build_exec(self) -> None:
@@ -764,6 +775,7 @@ class ServingEngine:
         self._next_rid = 0
         self._stall = 0
         self.watchdog.reset()
+        self.decode_step_wall_s = []
         for k in self.stats:
             self.stats[k] = 0
 
@@ -778,7 +790,13 @@ class ServingEngine:
             self.submit(prompt, max_new)
         t0 = time.perf_counter()
         while self.queue or any(s is not None for s in self.slots):
+            before = self.stats["decode_steps"]
+            ts = time.perf_counter()
             self.step()
+            if self.stats["decode_steps"] > before:
+                # a step that ran the batched decode: its wall time is
+                # the inter-token latency every active slot just paid
+                self.decode_step_wall_s.append(time.perf_counter() - ts)
         dt = time.perf_counter() - t0
         out = sorted(self.finished, key=lambda r: r.rid)
         stats = dict(self.stats)
@@ -788,4 +806,5 @@ class ServingEngine:
         stats["exec_tier"] = TIERS[self.exec_tier]
         stats["watchdog_breaches"] = self.watchdog.breaches
         stats["max_step_s"] = self.watchdog.max_step_s
+        stats["decode_step_wall_s"] = list(self.decode_step_wall_s)
         return out, stats

@@ -8,16 +8,25 @@ The contract, in order of importance:
   3. tile selection genuinely differs per parallelism regime — the
      reason the mesh must be visible to the search.
 """
+import dataclasses
+import json
 import math
+import os
+import subprocess
+import sys
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import api
 from repro.core.chain import attention_chain, gemm_chain
 from repro.core.perf_model import (MeshSpec, V5E, collective_bytes,
-                                   estimate, t_coll)
+                                   estimate, pipelined_collective_bytes,
+                                   t_coll, t_coll_pipelined)
 from repro.core.pruning import generate_candidates
-from repro.core.ring import ring_traffic_bytes
+from repro.core.ring import (ICI_HOP_LATENCY_S, pipelined_overlap_seconds,
+                             ring_traffic_bytes)
 from repro.core.search import heuristic_search
 
 DP2_TP4 = MeshSpec(axes=(("data", 2), ("model", 4)),
@@ -27,6 +36,10 @@ DP2_TP4 = MeshSpec(axes=(("data", 2), ("model", 4)),
 def ring4(n=4, ici_bw=50e9):
     return MeshSpec(axes=(("model", n),), placement=(("n", "model"),),
                     ici_bw=ici_bw)
+
+
+def ring_pipe(n=4, ici_bw=50e9):
+    return dataclasses.replace(ring4(n, ici_bw), pipelined=True)
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +145,166 @@ def test_estimate_includes_collectives():
     s = heuristic_search(ch, mesh=mesh, seed=0).best
     assert estimate(s, V5E, mesh) == pytest.approx(
         estimate(s, V5E) + t_coll(s, mesh))
+
+
+# ---------------------------------------------------------------------------
+# pipelined ring: the eq (2') overlap term and its crossover vs serial
+# ---------------------------------------------------------------------------
+
+def test_pipelined_overlap_reduces_to_serial_at_one_shard():
+    assert pipelined_overlap_seconds(1e-6, 9e-6, 1) == 0.0
+    assert pipelined_overlap_seconds(1e-6, 9e-6, 0) == 0.0
+    ch = attention_chain(128, 1024, 64, 64, heads=4)
+    one = dataclasses.replace(
+        MeshSpec(axes=(("model", 1),), placement=(("n", "model"),)),
+        pipelined=True)
+    assert t_coll_pipelined(one.localize(ch), one, 1e-5) == 0.0
+    assert pipelined_collective_bytes(one.localize(ch), one) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(hc=st.floats(0.0, 1e-4), hw=st.floats(1e-9, 1e-4),
+       n=st.integers(2, 32))
+def test_pipelined_overlap_properties(hc, hw, n):
+    """max(hop_compute, hop_wire)·(n-1): monotone in hop count and
+    never below the per-hop wire (or compute) lower bound — overlap
+    hides wire behind compute, it does not erase either."""
+    t = pipelined_overlap_seconds(hc, hw, n)
+    assert t >= hw * (n - 1)
+    assert t >= hc * (n - 1)
+    assert pipelined_overlap_seconds(hc, hw, n + 1) >= t
+
+
+def test_pipelined_coll_monotone_in_axis_size():
+    ch = attention_chain(128, 8192, 64, 64, heads=4)
+    prev = 0.0
+    for n in (2, 4, 8, 16):
+        mesh = ring_pipe(n)
+        cur = t_coll_pipelined(mesh.localize(ch), mesh, 0.0)
+        assert cur > prev
+        prev = cur
+
+
+def test_pipelined_pays_hop_latency_tax():
+    """With no tile compute to hide behind, the pipelined combine still
+    pays every ppermute launch — the term that lets the serial combine
+    win wire-dominated small-output shapes."""
+    ch = attention_chain(64, 8192, 64, 64, heads=2)
+    mesh = ring_pipe(8)
+    assert t_coll_pipelined(mesh.localize(ch), mesh, 0.0) \
+        >= 2 * 7 * ICI_HOP_LATENCY_S
+
+
+def test_pipelined_collective_bytes_closed_form():
+    """RS numerator + RS denominator (softmax stat) + pmax all-reduce +
+    AG, each at one chunk per hop — the buffers the HLO differential
+    harness counts on the compiled program."""
+    attn = attention_chain(128, 8192, 64, 64, heads=4)
+    n = 8
+    mesh = ring_pipe(n)
+    out_b = 128 * 64 * 4 * 4          # m*h*f32 x chain batch (heads)
+    rows = 4 * 128
+    expect = (2 * (n - 1) * out_b / n          # RS + AG numerator hops
+              + (n - 1) * 4.0 * rows / n       # RS denominator hops
+              + ring_traffic_bytes("all-reduce", 4.0 * rows, n))  # pmax
+    assert pipelined_collective_bytes(mesh.localize(attn), mesh) \
+        == pytest.approx(expect)
+
+
+def test_pipelined_vs_serial_crossover_per_shape():
+    """The tuner picks serial-vs-pipelined per shape: overlap + leaner
+    stats wire win the compute-rich big-output shape, the hop launch
+    tax keeps serial ahead on the tiny-output one (same kv length)."""
+    serial, pipe = ring4(8), ring_pipe(8)
+    big = api.fuse_attention_regimes(
+        128, 8192, 64, 64, heads=128, batch=1, dtype="bfloat16",
+        causal=True, regimes={"ring": serial, "ring-pipelined": pipe})
+    assert big.regime == "ring-pipelined"
+    assert big.times["ring-pipelined"] < big.times["ring"]
+    small = api.fuse_attention_regimes(
+        64, 8192, 64, 64, heads=2, batch=1, dtype="float32",
+        causal=True, regimes={"ring": serial, "ring-pipelined": pipe})
+    assert small.regime == "ring"
+    assert small.times["ring"] < small.times["ring-pipelined"]
+
+
+def test_estimate_includes_pipelined_term():
+    ch = gemm_chain(1024, 1024, 256, 512)
+    mesh = ring_pipe(4)
+    s = heuristic_search(ch, mesh=mesh, seed=0).best
+    base = estimate(s, V5E)
+    assert estimate(s, V5E, mesh) == pytest.approx(
+        base + t_coll_pipelined(s.chain, mesh, base))
+    assert t_coll_pipelined(s.chain, mesh, base) > 0.0
+
+
+def test_pipelined_is_a_distinct_cache_identity():
+    assert ring4(4).canonical() != ring_pipe(4).canonical()
+    api.clear_cache()
+    kw = dict(heads=4, batch=1, causal=True, interpret=True)
+    tk_s = api.fuse_attention(128, 1024, 64, 64, mesh=ring4(4), **kw)
+    tk_p = api.fuse_attention(128, 1024, 64, 64, mesh=ring_pipe(4), **kw)
+    tk_p2 = api.fuse_attention(128, 1024, 64, 64, mesh=ring_pipe(4), **kw)
+    assert tk_s is not tk_p     # pipelined is part of the cache key
+    assert tk_p is tk_p2        # same regime: cached
+    api.clear_cache()
+
+
+PIPE_WIRE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro.core.chain import attention_chain
+from repro.core.perf_model import MeshSpec, pipelined_collective_bytes
+from repro.dist import ring_dispatch
+from repro.launch import hlo_analysis
+
+mesh = jax.make_mesh((8,), ("model",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+B, Hq, Hkv, M, N, D = 1, 2, 2, 64, 1024, 32
+kx = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(kx[0], (B, Hq, M, D), jnp.float32)
+k = jax.random.normal(kx[1], (B, Hkv, N, D), jnp.float32)
+v = jax.random.normal(kx[2], (B, Hkv, N, D), jnp.float32)
+fn = jax.jit(lambda a, b, c: ring_dispatch.ring_attention(
+    a, b, c, mesh=mesh, axis="model", causal=True, bq=32, bkv=32,
+    pipelined=True, interpret=True))
+stats = hlo_analysis.parse_collectives(
+    fn.lower(q, k, v).compile().as_text())
+spec = MeshSpec(axes=(("model", 8),), placement=(("n", "model"),),
+                pipelined=True)
+chain = attention_chain(M, N, D, D, heads=Hq, batch=B,
+                        dtype="float32", causal=True)
+out = {"executed": stats.traffic_bytes,
+       "priced": pipelined_collective_bytes(spec.localize(chain), spec),
+       "counts": stats.counts}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_pipelined_wire_matches_overlap_pricing_8dev(tmp_path):
+    """Differential wire-level harness: the collective-permute
+    bytes x hops the compiled pipelined combine executes equal the
+    buffers the eq (2') overlap term prices — 3(n-1) permutes (RS
+    numerator + denominator, AG) plus the single pmax all-reduce,
+    nothing else."""
+    script = tmp_path / "pipe_wire.py"
+    script.write_text(PIPE_WIRE_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[-1][len("RESULT "):])
+    assert out["executed"] == pytest.approx(out["priced"], rel=1e-6)
+    assert out["counts"]["collective-permute"] == 3 * 7
+    assert out["counts"]["all-reduce"] == 1
 
 
 # ---------------------------------------------------------------------------

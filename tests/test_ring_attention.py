@@ -21,11 +21,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import api
 from repro.core.perf_model import MeshSpec
-from repro.dist.ring_dispatch import (finalize_partials, merge_partials,
-                                      plan_ring_attention)
+from repro.dist.ring_dispatch import (combine_partials, finalize_partials,
+                                      merge_partials, plan_ring_attention)
 from repro.dist.sharding import Rules, ring_dispatch_spec
 from repro.kernels.attention import fused_attention, fused_attention_partial
 from repro.kernels.ref import gqa_attention_ref
@@ -140,6 +142,96 @@ class TestCombine:
                                        atol=1e-6, rtol=1e-6)
 
 
+class TestCombinePartials:
+    """``combine_partials`` is the order-canonical spec of the executed
+    combine: global max + single rescale + shard-index-ordered sum.
+    Unlike the iterative ``merge_partials`` fold (whose per-step
+    rescales compose ``exp`` differently per order), it is BIT-identical
+    for every arrival order — the property a ring delivery relies on."""
+
+    def _parts(self, shards, *, causal, window, m=64, n=256, seed=0):
+        q, k, v = _qkv(m=m, n=n, seed=seed)
+        parts = _sharded_partials(q, k, v, shards, causal=causal,
+                                  window=window)
+        return q, k, v, list(enumerate(parts))
+
+    def test_matches_reference(self):
+        for shards in (1, 2, 4, 8):
+            q, k, v, parts = self._parts(shards, causal=True, window=0)
+            got = combine_partials(parts, q.dtype)
+            ref = gqa_attention_ref(q, k, v, causal=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=2e-6, rtol=2e-6)
+
+    @settings(max_examples=16, deadline=None)
+    @given(shards=st.sampled_from([1, 2, 4, 8]),
+           mode=st.sampled_from([(False, 0), (True, 0), (True, 100),
+                                 (True, 24)]),
+           rot=st.integers(0, 7), shuffle_seed=st.integers(0, 1000))
+    def test_hop_order_invariance_bitwise(self, shards, mode, rot,
+                                          shuffle_seed):
+        """Folding the shard partials in every ring arrival order —
+        any rotation (what a ring actually delivers) and any arbitrary
+        permutation (a retry after a failure) — produces the same BITS
+        as the index-ordered fold, for causal and windowed masks."""
+        causal, window = mode
+        q, _, _, parts = self._parts(shards, causal=causal,
+                                     window=window)
+        base = np.asarray(combine_partials(parts, q.dtype))
+        rotated = parts[rot % shards:] + parts[:rot % shards]
+        np.testing.assert_array_equal(
+            np.asarray(combine_partials(rotated, q.dtype)), base)
+        shuffled = list(parts)
+        random.Random(shuffle_seed).shuffle(shuffled)
+        np.testing.assert_array_equal(
+            np.asarray(combine_partials(shuffled, q.dtype)), base)
+
+    def test_fully_masked_shards_fold_as_exact_identity(self):
+        """Extra fully-masked shards (the (0, -inf, 0) identity a
+        causal split emits for kv entirely above the query rows) leave
+        the combine bit-identical: adding their zero addends is exact,
+        in any arrival position."""
+        q, k, v = _qkv(m=32, n=128)
+        live = list(enumerate(_sharded_partials(q, k, v, 4, causal=True,
+                                                window=0)))
+        base = np.asarray(combine_partials(live, q.dtype))
+        # shards covering kv the queries (pretend rows [0, 32)) never
+        # see: the partial kernel emits the merge identity for them
+        masked = []
+        for j, sl in enumerate([slice(64, 96), slice(96, 128)]):
+            part = fused_attention_partial(
+                q, k[:, :, sl], v[:, :, sl],
+                jnp.arange(sl.start, sl.stop, dtype=jnp.int32),
+                bq=32, bkv=32, causal=True, row_start=0, interpret=True)
+            assert float(jnp.max(part[2])) == 0.0
+            masked.append((4 + j, part))
+        for arrival in ([*live, *masked], [*masked, *live],
+                        [live[0], masked[1], *live[1:], masked[0]]):
+            got = np.asarray(combine_partials(arrival, q.dtype))
+            np.testing.assert_array_equal(got, base)
+
+    @settings(max_examples=8, deadline=None)
+    @given(shards=st.sampled_from([2, 4, 8]), seed=st.integers(0, 5))
+    def test_agrees_with_iterative_merge_within_tolerance(self, shards,
+                                                          seed):
+        """The canonical single-rescale combine and the iterative
+        pmax-free ``merge_partials`` fold are different f32 summation
+        orders of the same quantity — equal within tolerance, not bits
+        (the reason ``combine_partials`` exists)."""
+        q, k, v = _qkv(m=32, n=256, seed=seed)
+        parts = _sharded_partials(q, k, v, shards, causal=True, window=0)
+        o, _, l = _merge_all(parts)
+        via_merge = finalize_partials(o, l, q.dtype)
+        via_canon = combine_partials(list(enumerate(parts)), q.dtype)
+        np.testing.assert_allclose(np.asarray(via_canon),
+                                   np.asarray(via_merge),
+                                   atol=2e-6, rtol=2e-6)
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            combine_partials([], jnp.float32)
+
+
 class TestRegimeSearch:
     def test_ring_spec_gating(self):
         mesh = SimpleNamespace(shape={"data": 2, "model": 4})
@@ -194,10 +286,12 @@ class TestRegimeSearch:
 RING_EXEC_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
 import json
 import jax, jax.numpy as jnp
 from repro.core.chain import attention_chain
-from repro.core.perf_model import collective_bytes
+from repro.core.perf_model import collective_bytes, pipelined_collective_bytes
+from repro.dist import ring_dispatch
 from repro.dist.sharding import Rules
 from repro.kernels import ops
 from repro.kernels.ref import gqa_attention_ref
@@ -208,10 +302,15 @@ mesh = jax.make_mesh((8,), ("model",),
 rules = Rules(model="model", tp="model")
 out = {"shapes": []}
 
-# two long-context shapes (B, Hq, Hkv, M, N, D) where batch x heads
-# cannot cover the mesh and kv is long: the ring regime must win
-for B, Hq, Hkv, M, N, D in [(1, 4, 2, 128, 8192, 64),
-                            (1, 2, 2, 256, 4096, 64)]:
+# (B, Hq, Hkv, M, N, D, expected regime): long-context shapes where
+# batch x heads cannot cover the mesh — the pipelined ring must win the
+# compute-rich ones, serial ring the tiny-output one (per-hop launch
+# tax), spatial the short-kv control ("declines" both ring regimes)
+CASES = [(1, 4, 2, 128, 8192, 64, "ring-pipelined"),
+         (1, 2, 2, 256, 4096, 64, "ring-pipelined"),
+         (1, 2, 2, 64, 8192, 64, "ring"),
+         (1, 4, 2, 128, 512, 64, "spatial")]
+for B, Hq, Hkv, M, N, D, want in CASES:
     kx = jax.random.split(jax.random.PRNGKey(N), 3)
     q = jax.random.normal(kx[0], (B, Hq, M, D), jnp.float32)
     k = jax.random.normal(kx[1], (B, Hkv, N, D), jnp.float32)
@@ -221,27 +320,55 @@ for B, Hq, Hkv, M, N, D in [(1, 4, 2, 128, 8192, 64),
         rules, mesh, batch=B, q_heads=Hq, kv_heads=Hkv, q_len=M,
         kv_len=N, head_dim=D, dtype="float32", causal=True,
         interpret=True)
-    rec = {"shape": [B, Hq, Hkv, M, N, D], "regime": choice.regime,
-           "t_spatial": choice.times["spatial"],
-           "t_ring": choice.times["ring"]}
+    rec = {"shape": [B, Hq, Hkv, M, N, D], "want": want,
+           "regime": choice.regime, "times": dict(choice.times)}
 
-    # (b) numerics: the dispatched program vs the single-device oracle
+    # (b) numerics: the auto-dispatched program (whatever regime won)
+    # vs the single-device oracle
     got = ops.attention(q, k, v, causal=True, mode="interpret",
                         mesh=mesh, rules=rules)
     ref = gqa_attention_ref(q, k, v, causal=True)
     rec["maxerr"] = float(jnp.max(jnp.abs(got - ref)))
+    if want == "spatial":
+        out["shapes"].append(rec)
+        continue
 
-    # executed collective traffic of the combine vs core.ring pricing
-    fn = jax.jit(lambda a, b, c: ops.attention(
-        a, b, c, causal=True, mode="interpret", mesh=mesh, rules=rules))
-    compiled = fn.lower(q, k, v).compile()
-    stats = hlo_analysis.parse_collectives(compiled.as_text())
+    p = choice.kernel.params
+    ring_kw = dict(mesh=mesh, axis=plan.axis,
+                   batch_axes=plan.batch_axes, causal=True,
+                   bq=p.bq, bkv=p.bkv, interpret=True)
+    serial = ring_dispatch.ring_attention(q, k, v, pipelined=False,
+                                          **ring_kw)
+    piped = ring_dispatch.ring_attention(q, k, v, pipelined=True,
+                                         **ring_kw)
+    # pipelined vs serial: same rescaled addends, rotated f32 summation
+    # association — tight f32 agreement, bitwise NOT required
+    rec["pipe_vs_serial"] = float(jnp.max(jnp.abs(piped - serial)))
+    rec["pipe_vs_ref"] = float(jnp.max(jnp.abs(piped - ref)))
+
+    # executed wire, both combines, against their own pricing: serial
+    # psum traffic must equal collective_bytes, pipelined ppermute
+    # traffic pipelined_collective_bytes — the differential wire-level
+    # contract (eq 2')
     chain = attention_chain(M, N, D, D, heads=Hq, batch=B,
                             dtype="float32", causal=True)
     local = plan.spec.localize(chain)
-    rec["traffic_executed"] = stats.traffic_bytes
-    rec["traffic_priced"] = collective_bytes(local, plan.spec)
-    rec["coll_counts"] = stats.counts
+    pipe_spec = dataclasses.replace(plan.spec, pipelined=True)
+
+    def compiled_of(pipelined):
+        fn = jax.jit(lambda a, b, c: ring_dispatch.ring_attention(
+            a, b, c, pipelined=pipelined, **ring_kw))
+        return fn.lower(q, k, v).compile()
+    comp_serial = compiled_of(False)
+    comp_piped = compiled_of(True)
+    st_serial = hlo_analysis.parse_collectives(comp_serial.as_text())
+    st_piped = hlo_analysis.parse_collectives(comp_piped.as_text())
+    rec["serial_executed"] = st_serial.traffic_bytes
+    rec["serial_priced"] = collective_bytes(local, plan.spec)
+    rec["pipe_executed"] = st_piped.traffic_bytes
+    rec["pipe_priced"] = pipelined_collective_bytes(local, pipe_spec)
+    rec["pipe_counts"] = st_piped.counts
+    rec["n_hops_expected"] = 3 * (8 - 1)
 
     # (c) measured per-device HBM bytes: ring dispatch vs the spatial
     # regime (replicated here — heads cannot cover the mesh), from XLA
@@ -251,7 +378,7 @@ for B, Hq, Hkv, M, N, D in [(1, 4, 2, 128, 8192, 64),
         if isinstance(ca, list):
             ca = ca[0]
         return float(ca["bytes accessed"])
-    rec["bytes_ring"] = bytes_of(compiled)
+    rec["bytes_ring"] = bytes_of(comp_piped)
     sp = jax.jit(lambda a, b, c: ops.attention(
         a, b, c, causal=True, mode="interpret"))
     rec["bytes_spatial"] = bytes_of(sp.lower(q, k, v).compile())
@@ -263,12 +390,16 @@ print("RESULT " + json.dumps(out))
 
 @pytest.mark.slow
 def test_ring_dispatch_acceptance_8dev(tmp_path):
-    """Acceptance contract on an 8-device forced-host mesh, two
-    long-context shapes: (a) regime search auto-selects ring, (b) the
-    dispatched program matches the single-device reference within fp32
-    tolerance, (c) ring beats spatial in both the model estimate and
-    measured per-device bytes, and the executed combine traffic equals
-    ``core.ring.ring_traffic_bytes`` pricing on the compiled HLO."""
+    """Acceptance contract on an 8-device forced-host mesh: (a) the
+    regime search auto-selects ring-pipelined for the compute-rich
+    long-context shapes, serial ring for the tiny-output one, and
+    declines both on the short control; (b) every dispatched program
+    matches the single-device reference within fp32 tolerance, with
+    pipelined-vs-serial agreement at f32 ulp scale; (c) the executed
+    collective traffic of EACH combine equals its own pricing on the
+    compiled HLO — psum all-reduces vs ``collective_bytes``, ppermute
+    hops vs ``pipelined_collective_bytes`` (eq 2') — and the pipelined
+    ring emits exactly ``3(n-1)`` collective-permutes."""
     script = tmp_path / "ring_exec.py"
     script.write_text(RING_EXEC_SCRIPT)
     env = dict(os.environ)
@@ -279,11 +410,21 @@ def test_ring_dispatch_acceptance_8dev(tmp_path):
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
     assert line, proc.stdout
     out = json.loads(line[-1][len("RESULT "):])
-    assert len(out["shapes"]) == 2
+    assert len(out["shapes"]) == 4
     for rec in out["shapes"]:
-        assert rec["regime"] == "ring", rec
-        assert rec["t_ring"] < rec["t_spatial"], rec
+        assert rec["regime"] == rec["want"], rec
         assert rec["maxerr"] < 2e-6, rec
-        assert rec["traffic_executed"] == pytest.approx(
-            rec["traffic_priced"], rel=1e-6), rec
+        if rec["want"] == "spatial":
+            continue
+        assert rec["pipe_vs_serial"] < 2e-6, rec
+        assert rec["pipe_vs_ref"] < 2e-6, rec
+        assert rec["serial_executed"] == pytest.approx(
+            rec["serial_priced"], rel=1e-6), rec
+        assert rec["pipe_executed"] == pytest.approx(
+            rec["pipe_priced"], rel=1e-6), rec
+        assert rec["pipe_counts"]["collective-permute"] == \
+            rec["n_hops_expected"], rec
         assert rec["bytes_ring"] < rec["bytes_spatial"], rec
+    # the tuner separated the three regimes across the sweep
+    assert {r["regime"] for r in out["shapes"]} == \
+        {"spatial", "ring", "ring-pipelined"}

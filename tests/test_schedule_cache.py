@@ -180,6 +180,30 @@ def test_mesh_hit_across_equivalent_meshes(monkeypatch):
     assert warm.report.best.key() == cold.report.best.key()
 
 
+def test_pipelined_regime_roundtrips_under_own_key(monkeypatch):
+    """MeshSpec(pipelined=True) is its own cache identity: the
+    ring-pipelined regime's schedule replays from disk under its
+    canonical key, and the serial ring spec on the same mesh is a
+    separate population (a warm serial entry must never answer a
+    pipelined lookup — the two price different collective terms)."""
+    import dataclasses
+    ring = MeshSpec(axes=(("model", 4),), placement=(("n", "model"),))
+    pipe = dataclasses.replace(ring, pipelined=True)
+    assert pipe.canonical() != ring.canonical()
+    kw = dict(heads=4, batch=1, causal=True, interpret=True)
+    cold = api.fuse_attention(128, 1024, 64, 64, mesh=pipe, **kw)
+    assert cold.source == "search"
+    api._CACHE.clear()
+    _forbid_search(monkeypatch)
+    warm = api.fuse_attention(128, 1024, 64, 64, mesh=pipe, **kw)
+    assert warm.source == "disk"
+    assert warm.report.best_time == pytest.approx(cold.report.best_time)
+    # the serial spec misses: distinct disk entry, fresh search
+    api._CACHE.clear()
+    with pytest.raises(AssertionError, match="warm path"):
+        api.fuse_attention(128, 1024, 64, 64, mesh=ring, **kw)
+
+
 def test_expr_serialization_roundtrip():
     for expr in (deep_tiling("mhnk"),
                  flat_tiling("mn", [("k",), ("h",)])):

@@ -291,6 +291,38 @@ def test_engine_matches_reference_on_ragged_workload():
     for r, want in zip(results, ref):
         assert r.tokens == want
     assert eng.pool.n_free == eng.pool.n_pages - 1
+    # the inter-token-latency trace covers every decode step
+    itl = stats["decode_step_wall_s"]
+    assert len(itl) == stats["decode_steps"]
+    assert all(dt > 0.0 for dt in itl)
+
+
+def test_itl_percentile_helper():
+    """The bench_serving percentile (linear interpolation between
+    closest ranks) on a deterministic synthetic trace, pinned against
+    hand-computed values and numpy's default."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.bench_serving import percentile
+
+    trace = [5.0, 1.0, 3.0, 2.0, 4.0]  # unsorted on purpose
+    assert percentile(trace, 0.0) == 1.0
+    assert percentile(trace, 100.0) == 5.0
+    assert percentile(trace, 50.0) == 3.0
+    assert percentile(trace, 25.0) == 2.0
+    # pos = 4 * 0.99 = 3.96 -> 4.0 + 0.96 * (5.0 - 4.0)
+    assert percentile(trace, 99.0) == pytest.approx(4.96)
+    assert percentile([7.0], 99.0) == 7.0
+    rng = np.random.RandomState(0)
+    for t in rng.rand(4, 9):
+        for q in (0.0, 10.0, 37.5, 50.0, 90.0, 99.0, 100.0):
+            assert percentile(list(t), q) == pytest.approx(
+                float(np.percentile(t, q)))
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+    with pytest.raises(ValueError):
+        percentile([1.0], 101.0)
 
 
 def test_engine_preemption_recovers():
@@ -527,7 +559,7 @@ group = hq // hkv
 kk = jnp.repeat(KP.gather_pages(kp, table), group, axis=1)
 vv = jnp.repeat(KP.gather_pages(vp, table), group, axis=1)
 kv_pos = KP.paged_kv_positions(table, ps)
-diffs = []
+diffs, pipe_diffs, pipe_vs_serial = [], [], []
 with jax.set_mesh(mesh):
     for win in (0, 10):
         ref = _paged_positional_attention(q, kk, vv, positions[:, None],
@@ -536,7 +568,17 @@ with jax.set_mesh(mesh):
             q, kp, vp, table, positions, window=win, scale=d ** -0.5,
             rules=rules, mesh=mesh, batch_axes=("data",))
         diffs.append(float(jnp.max(jnp.abs(ref - got))))
+        # pipelined ppermute combine: same rescaled addends as the
+        # serial psum, rotated f32 association
+        piped = RD.paged_ring_decode_attention(
+            q, kp, vp, table, positions, window=win, scale=d ** -0.5,
+            rules=rules, mesh=mesh, batch_axes=("data",),
+            pipelined=True)
+        pipe_diffs.append(float(jnp.max(jnp.abs(ref - piped))))
+        pipe_vs_serial.append(float(jnp.max(jnp.abs(got - piped))))
 out["ring_max_diff"] = max(diffs)
+out["pipe_max_diff"] = max(pipe_diffs)
+out["pipe_vs_serial"] = max(pipe_vs_serial)
 
 # the engine under the mesh: tuner-chosen regime, full workload
 cfg = get_config("qwen3_8b", smoke=True)
@@ -553,6 +595,8 @@ with jax.set_mesh(mesh):
                         n_pages=24, max_pages_per_seq=8)
     res, stats = eng.run(reqs)
 out["regime"] = eng.regime
+out["rt_ring"] = eng.model.rt.dist_decode_attn
+out["rt_pipe"] = eng.model.rt.dist_decode_pipelined
 out["counts"] = [len(r.tokens) for r in res]
 out["pool_clean"] = eng.pool.n_free == eng.pool.n_pages - 1
 print(json.dumps(out))
@@ -569,9 +613,17 @@ def test_paged_ring_execution_8dev():
     assert proc.returncode == 0, proc.stderr[-4000:]
     out = __import__("json").loads(proc.stdout.strip().splitlines()[-1])
     assert out["ring_max_diff"] < 1e-5
+    assert out["pipe_max_diff"] < 1e-5
+    # f32 combine, same addends: serial vs pipelined differ only by the
+    # summation rotation
+    assert out["pipe_vs_serial"] < 2e-6
     assert out["counts"] == [3, 8, 5, 2]
     assert out["pool_clean"]
-    assert out["regime"] in ("paged-spatial", "paged-ring")
+    assert out["regime"] in ("paged-spatial", "paged-ring",
+                             "paged-ring-pipelined")
+    # the regime threads into the Runtime the engine executes
+    assert out["rt_ring"] == (out["regime"] != "paged-spatial")
+    assert out["rt_pipe"] == (out["regime"] == "paged-ring-pipelined")
 
 
 # ---------------------------------------------------------------------------
